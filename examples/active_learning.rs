@@ -1,0 +1,108 @@
+//! Active sampling of a malaria-incidence-like spatial field (paper §5.4,
+//! Fig. 5b/c): query locations minimizing integrated posterior variance
+//! (qNIPV) with true WISKI fantasization, vs random selection.
+//!
+//! ```bash
+//! cargo run --release --example active_learning -- --rounds 20
+//! ```
+
+use std::sync::Arc;
+
+use wiski::active::{integrated_variance, select_nipv, select_random};
+use wiski::data::{self, Projection};
+use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
+use wiski::metrics::rmse;
+use wiski::runtime::Runtime;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn make_model(rt: &Arc<Runtime>) -> anyhow::Result<Wiski> {
+    Wiski::new(
+        rt.clone(),
+        WiskiConfig {
+            kind: "matern12".into(),
+            g: 30,
+            d: 2,
+            r: 256,
+            lr: 1e-2,
+            grad_steps: 1,
+            learn_noise: true,
+        },
+        Projection::identity(2),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let rounds: usize = arg("--rounds", "20").parse()?;
+    let q = 6;
+    let rt = Arc::new(Runtime::new("artifacts")?);
+
+    let field = data::malaria_field(3000, 0);
+    let (train_x, train_y) = (&field.x[..2000], &field.y[..2000]);
+    let (test_x, test_y) = (field.x[2000..].to_vec(), field.y[2000..].to_vec());
+    // variance is integrated over a subsample of the test region
+    let eval_x: Vec<Vec<f64>> = test_x.iter().take(400).cloned().collect();
+
+    for strategy in ["qnipv", "random"] {
+        let mut model = make_model(&rt)?;
+        // initial 10 random observations
+        for i in 0..10 {
+            model.observe(&train_x[i * 97 % train_x.len()], train_y[i * 97 % train_y.len()])?;
+        }
+        let mut used: Vec<usize> = vec![];
+        println!("\nstrategy={strategy}");
+        for round in 0..rounds {
+            // candidate pool: a seeded subsample of unqueried training sites
+            let mut cand_idx: Vec<usize> = (0..train_x.len())
+                .filter(|i| !used.contains(i))
+                .collect();
+            cand_idx.truncate(60); // greedy NIPV cost control
+            let candidates: Vec<Vec<f64>> = cand_idx.iter().map(|&i| train_x[i].clone()).collect();
+
+            let chosen = if strategy == "qnipv" {
+                // true fantasization: clone the model state, condition on
+                // the trial batch with dummy targets, measure variance
+                // (posterior variance does not depend on the targets).
+                let snapshot = &model;
+                select_nipv(&candidates, q, |trial| {
+                    let mut fant = snapshot.clone();
+                    fant.set_grad_enabled(false);
+                    let xs: Vec<Vec<f64>> = trial.iter().map(|&i| candidates[i].clone()).collect();
+                    let ys = vec![0.0; xs.len()];
+                    let ss = vec![1.0; xs.len()];
+                    fant.observe_weighted(&xs, &ys, &ss)?;
+                    Ok(integrated_variance(&fant.predict_full(&eval_x)?))
+                })?
+            } else {
+                select_random(candidates.len(), q, round as u64)
+            };
+
+            for &c in &chosen {
+                let gi = cand_idx[c];
+                model.observe(&train_x[gi], train_y[gi])?;
+                used.push(gi);
+            }
+            model.refit(3)?;
+
+            if (round + 1) % 5 == 0 {
+                let preds = model.predict(&test_x)?;
+                let r = rmse(&preds.iter().map(|p| p.mean).collect::<Vec<_>>(), &test_y);
+                let iv = integrated_variance(&preds);
+                println!(
+                    "round {:>3}  n={:>4}  test RMSE={:.4}  integrated var={:.4}",
+                    round + 1,
+                    model.num_observed(),
+                    r,
+                    iv
+                );
+            }
+        }
+    }
+    Ok(())
+}

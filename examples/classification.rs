@@ -1,0 +1,63 @@
+//! Online Dirichlet-GP classification (paper §5.2, Fig. 4): banana and
+//! svmguide-like binary tasks, WISKI classifiers updated with a single
+//! step per observation.
+//!
+//! ```bash
+//! cargo run --release --example classification -- --dataset banana
+//! ```
+
+use std::sync::Arc;
+
+use wiski::data::{self, Projection};
+use wiski::gp::{DirichletClassifier, Wiski, WiskiConfig};
+use wiski::metrics::accuracy;
+use wiski::runtime::Runtime;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dataset = arg("--dataset", "banana");
+    let rt = Arc::new(Runtime::new("artifacts")?);
+
+    let (ds, proj) = match dataset.as_str() {
+        "banana" => (data::banana(400, 0), Projection::identity(2)),
+        "svmguide" => (data::svmguide_like(3000, 0), Projection::random(4, 2, 11)),
+        other => anyhow::bail!("unknown dataset {other}"),
+    };
+    let n_test = ds.len() / 10;
+    println!("dataset={dataset} n={} (test {})", ds.len(), n_test);
+
+    let make = || {
+        Wiski::new(
+            rt.clone(),
+            WiskiConfig { lr: 5e-3, ..WiskiConfig::default() },
+            proj.clone(),
+        )
+        .unwrap()
+    };
+    let mut clf = DirichletClassifier::new(vec![make(), make()]);
+
+    let test_x: Vec<Vec<f64>> = ds.x[..n_test].to_vec();
+    let test_y: Vec<usize> = ds.y[..n_test].iter().map(|v| *v as usize).collect();
+
+    let mut seen = 0usize;
+    for (x, y) in ds.x[n_test..].iter().zip(&ds.y[n_test..]) {
+        clf.observe(x, *y as usize)?;
+        seen += 1;
+        if seen % (ds.len() / 8).max(1) == 0 {
+            let pred = clf.predict_class(&test_x)?;
+            println!("n={:>5}  test accuracy {:.3}", seen, accuracy(&pred, &test_y));
+        }
+    }
+    let pred = clf.predict_class(&test_x)?;
+    println!("final accuracy: {:.3}", accuracy(&pred, &test_y));
+    let proba = clf.predict_proba(&test_x[..3.min(test_x.len())].to_vec(), 64, 0)?;
+    println!("sample class probabilities: {proba:.3?}");
+    Ok(())
+}

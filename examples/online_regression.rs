@@ -1,0 +1,136 @@
+//! End-to-end driver (the repo's flagship validation run): online
+//! regression on a UCI-scale synthetic stream, comparing WISKI against the
+//! exact-GP and O-SVGP baselines through the full coordinator stack —
+//! dataset -> streaming server (micro-batching router) -> model -> PJRT
+//! artifacts -> metrics.  Reproduces the *shape* of the paper's Figure 2:
+//! WISKI per-step time stays flat while exact-GP time grows, at matching
+//! accuracy.  Results land in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example online_regression [--dataset powerplant] [--stream 2000]
+//! ```
+
+use std::sync::Arc;
+
+use wiski::coordinator::ModelServer;
+use wiski::data::{self, Projection};
+use wiski::gp::{ExactGp, OnlineGp, OSvgp, SolveMethod, Wiski, WiskiConfig};
+use wiski::kernels::Kernel;
+use wiski::metrics::{gaussian_nll, rmse};
+use wiski::runtime::Runtime;
+
+fn arg(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dataset = arg("--dataset", "powerplant");
+    let stream_cap: usize = arg("--stream", "2000").parse()?;
+    let eval_every: usize = arg("--eval-every", "250").parse()?;
+
+    let spec = data::spec_by_name(&dataset).expect("unknown dataset");
+    let mut ds = data::uci_like(spec, 0);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(0);
+    stream.truncate(stream_cap);
+    println!(
+        "dataset={dataset} d={} pretrain={} stream={} test={}",
+        spec.dim,
+        pre.len(),
+        stream.len(),
+        test.len()
+    );
+
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let proj = if spec.dim <= 2 {
+        Projection::identity(spec.dim)
+    } else {
+        Projection::random(spec.dim, 2, 17)
+    };
+
+    // --- models ---------------------------------------------------------
+    let mut wiski = Wiski::new(rt.clone(), WiskiConfig::default(), proj.clone())?;
+    let mut osvgp = OSvgp::new(rt.clone(), "rbf", 2, 256, 1e-3, 1e-3, proj.clone(), 0)?;
+    let mut exact = ExactGp::new(Kernel::Rbf { dim: 2 }, SolveMethod::Cholesky, 0.05, 0);
+    // exact GP consumes projected features directly (it has no lattice cap)
+    let project = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> { xs.iter().map(|x| proj.apply(x)).collect() };
+
+    // pretrain (batch phase, paper §5.1)
+    wiski.observe_batch(&pre.x, &pre.y)?;
+    wiski.refit(50)?;
+    osvgp.observe_batch(&pre.x, &pre.y)?;
+    exact.observe_batch(&project(&pre.x), &pre.y)?;
+    exact.refit(25)?;
+
+    // --- stream through the coordinator ---------------------------------
+    println!("\n{:>6} | {:>18} | {:>18} | {:>18}", "n", "wiski", "osvgp", "exact-chol");
+    println!("{:>6} | {:>8} {:>9} | {:>8} {:>9} | {:>8} {:>9}",
+             "", "rmse", "us/step", "rmse", "us/step", "rmse", "us/step");
+
+    let server = ModelServer::spawn(wiski, 1);
+    let h = server.handle();
+
+    let mut exact_time_us = 0.0;
+    let mut exact_steps = 0u64;
+    let mut osvgp_time_us = 0.0;
+    let eval = |preds: &[wiski::gp::Prediction], label: &str| -> (f64, f64) {
+        let means: Vec<f64> = preds.iter().map(|p| p.mean).collect();
+        let vars: Vec<f64> = preds.iter().map(|p| p.var_y).collect();
+        let _ = label;
+        (rmse(&means, &test.y), gaussian_nll(&means, &vars, &test.y))
+    };
+
+    for (i, (x, y)) in stream.x.iter().zip(&stream.y).enumerate() {
+        h.observe(x.clone(), *y)?;
+
+        let t0 = std::time::Instant::now();
+        osvgp.observe(x, *y)?;
+        osvgp_time_us += t0.elapsed().as_secs_f64() * 1e6;
+
+        // cap exact-GP growth so the demo finishes; its trend is the point
+        if exact.num_observed() < 1200 {
+            let t1 = std::time::Instant::now();
+            exact.observe(&proj.apply(x), *y)?;
+            exact_time_us += t1.elapsed().as_secs_f64() * 1e6;
+            exact_steps += 1;
+        }
+
+        if (i + 1) % eval_every == 0 {
+            let stats = h.flush()?;
+            let pw = h.predict(test.x.clone())?;
+            let (rw, _nw) = eval(&pw, "wiski");
+            let po = osvgp.predict(&test.x)?;
+            let (ro, _no) = eval(&po, "osvgp");
+            let pe = exact.predict(&project(&test.x))?;
+            let (re, _ne) = eval(&pe, "exact");
+            println!(
+                "{:>6} | {:>8.4} {:>9.0} | {:>8.4} {:>9.0} | {:>8.4} {:>9.0}",
+                i + 1,
+                rw,
+                stats.mean_observe_us(),
+                ro,
+                osvgp_time_us / (i + 1) as f64,
+                re,
+                exact_time_us / exact_steps.max(1) as f64,
+            );
+        }
+    }
+
+    let stats = h.flush()?;
+    println!(
+        "\nfinal: observed={} batches={} mean_observe={:.0}us mean_predict={:.0}us",
+        stats.observed,
+        stats.observe_batches,
+        stats.mean_observe_us(),
+        stats.predict_time_us / stats.predicts.max(1) as f64,
+    );
+    let pw = h.predict(test.x.clone())?;
+    let (r, n) = eval(&pw, "wiski");
+    println!("wiski final: test RMSE={r:.4} NLL={n:.4}");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: stream observations into a WISKI model and predict.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use wiski::data::Projection;
+use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
+use wiski::rng::Rng;
+use wiski::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the AOT artifacts (built once by `make artifacts`).
+    let rt = Arc::new(Runtime::new("artifacts")?);
+
+    // 2. A WISKI model: 16x16 inducing lattice (m=256), root rank 128,
+    //    RBF-ARD kernel, one hyperparameter gradient step per observation.
+    let mut model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
+
+    // 3. Stream 500 noisy observations of a 2-D surface, one at a time.
+    let mut rng = Rng::new(0);
+    let f = |x: &[f64]| (2.5 * x[0]).sin() * (1.5 * x[1]).cos();
+    let t0 = std::time::Instant::now();
+    for i in 0..500 {
+        let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+        let y = f(&x) + 0.05 * rng.normal();
+        model.observe(&x, y)?;
+        if (i + 1) % 100 == 0 {
+            println!(
+                "n={:4}  mll/n={:+.3}  noise={:.4}  krank={}",
+                i + 1,
+                model.last_mll / (i + 1) as f64,
+                model.noise_var(),
+                model.krank()
+            );
+        }
+    }
+    println!("streamed 500 points in {:.2?} (constant-time updates)", t0.elapsed());
+
+    // 4. Predict on a grid and report the fit.
+    let mut test = Vec::new();
+    let mut truth = Vec::new();
+    for i in 0..20 {
+        for j in 0..20 {
+            let x = vec![-0.9 + 1.8 * i as f64 / 19.0, -0.9 + 1.8 * j as f64 / 19.0];
+            truth.push(f(&x));
+            test.push(x);
+        }
+    }
+    let preds = model.predict(&test)?;
+    let rmse = wiski::metrics::rmse(
+        &preds.iter().map(|p| p.mean).collect::<Vec<_>>(),
+        &truth,
+    );
+    println!("test RMSE vs noiseless truth: {rmse:.4}");
+    println!("posterior at origin: mean={:+.3} sd={:.3}", preds[190].mean, preds[190].var_y.sqrt());
+    Ok(())
+}

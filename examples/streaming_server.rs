@@ -1,0 +1,61 @@
+//! The coordinator as a service: multiple client threads stream
+//! observations and predictions against one WISKI model server, exercising
+//! the router's micro-batching under concurrency.
+//!
+//! ```bash
+//! cargo run --release --example streaming_server
+//! ```
+
+use std::sync::Arc;
+
+use wiski::coordinator::ModelServer;
+use wiski::data::Projection;
+use wiski::gp::{Wiski, WiskiConfig};
+use wiski::rng::Rng;
+use wiski::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
+    // batch up to 8 queued observations into one artifact call
+    let server = ModelServer::spawn(model, 8);
+
+    let n_clients = 4;
+    let per_client = 250;
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let h = server.handle();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
+            let mut rng = Rng::new(c as u64);
+            let mut last_pred = (0.0, 0.0);
+            for i in 0..per_client {
+                let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+                let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+                h.observe(x, y)?;
+                if i % 50 == 49 {
+                    let p = h.predict(vec![vec![0.25, -0.5]])?;
+                    last_pred = (p[0].mean, p[0].var_y.sqrt());
+                }
+            }
+            Ok(last_pred)
+        }));
+    }
+    for (c, j) in joins.into_iter().enumerate() {
+        let (mean, sd) = j.join().unwrap()?;
+        println!("client {c}: last posterior at (0.25,-0.5): {mean:+.3} +- {sd:.3}");
+    }
+    let stats = server.handle().flush()?;
+    let truth = (2.5f64 * 0.25).sin() * (1.5f64 * -0.5).cos();
+    println!(
+        "served {} observations in {} batches ({:.1} obs/batch) + {} predicts in {:.2?}; truth {truth:+.3}",
+        stats.observed,
+        stats.observe_batches,
+        stats.observed as f64 / stats.observe_batches.max(1) as f64,
+        stats.predicts,
+        t0.elapsed()
+    );
+    println!("mean observe batch latency: {:.0}us", stats.mean_observe_us());
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""AOT lowering: jax (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the runtime's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a fixed-shape function; the full variant set covers each
+experiment in DESIGN.md §3.  A plain-text `manifest.txt` records the
+calling convention (input/output names, dtypes, shapes, and meta) so the
+Rust runtime never hard-codes shapes.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--only REGEX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import covfns, model, osvgp
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big constant arrays
+    # (e.g. the baked-in inducing lattice) as `{...}`, which the old HLO text
+    # parser on the Rust side silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# --- variant registry -----------------------------------------------------------
+
+
+def wiski_family(kind, d, g, r, *, q=1, b=256, with_mll=False):
+    """(name, fn, input_specs, input_names, output_names, meta) tuples for one
+    WISKI configuration."""
+    m = g ** d
+    td = covfns.theta_dim(kind, d)
+    cache_in = [spec(m), spec(), spec(), spec(m, r), spec(r, r), spec()]
+    cache_names = ["wty", "yty", "n", "U", "C", "krank"]
+    out = []
+
+    step = model.make_step_fn(kind=kind, g=g, d=d, r=r, q=q)
+    out.append((
+        step.__name__, step,
+        [spec(td)] + cache_in + [spec(q, d), spec(q), spec(q), spec(q)],
+        ["theta"] + cache_names + ["x", "y", "s", "mask"],
+        [f"{c}_out" for c in cache_names] + ["mll", "grad_theta"],
+        dict(step.meta),
+    ))
+
+    pred = model.make_predict_fn(kind=kind, g=g, d=d, r=r, b=b)
+    out.append((
+        pred.__name__, pred,
+        [spec(td)] + cache_in + [spec(b, d)],
+        ["theta"] + cache_names + ["xstar"],
+        ["mean", "var", "sig2"],
+        dict(pred.meta),
+    ))
+
+    if with_mll:
+        mf = model.make_mll_fn(kind=kind, g=g, d=d, r=r)
+        out.append((
+            mf.__name__, mf,
+            [spec(td)] + cache_in,
+            ["theta"] + cache_names,
+            ["mll", "grad_theta"],
+            dict(mf.meta),
+        ))
+    return out
+
+
+def osvgp_family(kind, d, m, *, q=1, b=256):
+    td = covfns.theta_dim(kind, d)
+    out = []
+    step = osvgp.make_step_fn(kind=kind, m=m, d=d, q=q)
+    out.append((
+        step.__name__, step,
+        [spec(m), spec(m, m), spec(td), spec(m, d), spec(td), spec(m),
+         spec(m, m), spec(q, d), spec(q), spec(q), spec()],
+        ["q_mu", "q_raw", "theta", "z", "theta_old", "old_mu", "old_l",
+         "x", "y", "mask", "beta"],
+        ["loss", "g_q_mu", "g_q_raw", "g_theta"],
+        dict(step.meta),
+    ))
+    pred = osvgp.make_predict_fn(kind=kind, m=m, d=d, b=b)
+    out.append((
+        pred.__name__, pred,
+        [spec(m), spec(m, m), spec(td), spec(m, d), spec(b, d)],
+        ["q_mu", "q_raw", "theta", "z", "xstar"],
+        ["mean", "var", "sig2"],
+        dict(pred.meta),
+    ))
+    qf = osvgp.make_qfactor_fn(m=m)
+    out.append((
+        qf.__name__, qf,
+        [spec(m, m)], ["q_raw"], ["l_q"], dict(qf.meta),
+    ))
+    return out
+
+
+def build_registry():
+    """The full artifact set; DESIGN.md §3 maps experiments to entries."""
+    arts = []
+    # UCI regression default (figs 2, 3, 4 classification, ablations).
+    # r = m: the rank ablation (Table 1 / debug_fit) shows r = m/2 already
+    # costs accuracy on well-spread streams, exactly the paper's findings.
+    arts += wiski_family("rbf", 2, 16, 256, q=1, b=256, with_mll=True)
+    arts += wiski_family("rbf", 2, 16, 128, q=1, b=256, with_mll=True)
+    # 3DRoad-like large grid (fig 3, largest dataset; d=2 native)
+    arts += wiski_family("rbf", 2, 40, 256, q=1, b=256)
+    # FX time series with spectral mixture kernel (fig 1)
+    arts += wiski_family("sm4", 1, 128, 64, q=1, b=64, with_mll=True)
+    # Bayesian optimization, noisy 3-D test functions (fig 5a, A.6-A.8);
+    # with_mll: BO refits the surrogate between acquisition rounds
+    arts += wiski_family("rbf", 3, 10, 256, q=3, b=512, with_mll=True)
+    # Malaria active learning (fig 5b,c); with_mll for per-round refits
+    arts += wiski_family("matern12", 2, 30, 256, q=6, b=512, with_mll=True)
+    # Table 1 rank ablation at m=256 (r=128, r=256 already above)
+    for r in (32, 64, 192):
+        arts += wiski_family("rbf", 2, 16, r, q=1, b=256)
+    # Table 1 rank ablation at m=1024
+    for r in (256, 512):
+        arts += wiski_family("rbf", 2, 32, r, q=1, b=256)
+    # Figure A.4 m-ablation small end (m=64)
+    arts += wiski_family("rbf", 2, 8, 64, q=1, b=256)
+
+    # O-SVGP baselines
+    arts += osvgp_family("rbf", 2, 256, q=1, b=256)     # UCI + classification
+    arts += osvgp_family("sm4", 1, 32, q=1, b=64)       # FX (fig 1)
+    arts += osvgp_family("rbf", 3, 512, q=3, b=512)     # BO
+    arts += osvgp_family("matern12", 2, 400, q=6, b=512)  # malaria
+    arts += osvgp_family("rbf", 2, 64, q=1, b=256)      # m-ablation small end
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = build_registry()
+    if args.only:
+        rx = re.compile(args.only)
+        arts = [a for a in arts if rx.search(a[0])]
+
+    manifest = []
+    for name, fn, in_specs, in_names, out_names, meta in arts:
+        # keep_unused: inputs that a variant doesn't touch (e.g. yty in the
+        # predict graph) must stay in the parameter list or the Rust side's
+        # uniform calling convention breaks.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [tuple(o.shape) for o in lowered.out_info]
+        stanza = [f"artifact {name}", f"file {name}.hlo.txt"]
+        stanza.append("meta " + " ".join(f"{k}={v}" for k, v in sorted(meta.items())))
+        for nm, sp in zip(in_names, in_specs):
+            dims = ",".join(str(x) for x in sp.shape) if sp.shape else "scalar"
+            stanza.append(f"in {nm} f32 {dims}")
+        for nm, shp in zip(out_names, out_shapes):
+            dims = ",".join(str(x) for x in shp) if shp else "scalar"
+            stanza.append(f"out {nm} f32 {dims}")
+        stanza.append("end")
+        manifest.append("\n".join(stanza))
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(arts)} artifacts -> {args.out}/manifest.txt", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

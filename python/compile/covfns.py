@@ -1,0 +1,119 @@
+"""Covariance functions on the inducing lattice (build-time jnp).
+
+theta is a flat f32 vector so the Rust coordinator can treat hyperparameters
+as an opaque buffer and run Adam on the gradient returned by the artifacts.
+
+Layouts (all raw parameters go through softplus to stay positive):
+  rbf / matern12 over d dims:  [raw_ls_0 .. raw_ls_{d-1}, raw_outputscale, raw_noise]
+  smQ (spectral mixture, d=1): [raw_w_1..raw_w_Q, raw_mu_1..raw_mu_Q,
+                                raw_v_1..raw_v_Q, raw_noise]
+
+k_sm(tau) = sum_q w_q * exp(-2 pi^2 tau^2 v_q) * cos(2 pi mu_q tau)
+(Wilson & Adams 2013), the kernel Figure 1 of the paper uses on the FX data.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TWO_PI = 6.283185307179586
+
+
+def softplus(x):
+    return jnp.logaddexp(0.0, x)
+
+
+def inv_softplus(y):
+    """Inverse of softplus for initializing raw parameters from targets."""
+    import numpy as np
+
+    y = np.asarray(y, dtype=np.float64)
+    return np.where(y > 20, y, np.log(np.expm1(np.maximum(y, 1e-8)))).astype(np.float32)
+
+
+def theta_dim(kind: str, d: int) -> int:
+    if kind in ("rbf", "matern12"):
+        return d + 2
+    if kind.startswith("sm"):
+        q = int(kind[2:])
+        return 3 * q + 1
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def noise_var(kind: str, theta):
+    """Observation noise variance sigma^2 (always the last theta entry)."""
+    return softplus(theta[-1]) + 1e-6
+
+
+def kuu(kind: str, theta, lattice):
+    """Dense covariance of the m lattice points. lattice: [m, d]."""
+    x = jnp.asarray(lattice, jnp.float32)
+    m, d = x.shape
+    if kind in ("rbf", "matern12"):
+        ls = softplus(theta[:d]) + 1e-6                      # [d]
+        os2 = softplus(theta[d]) + 1e-6
+        xs = x / ls[None, :]
+        d2 = jnp.sum(xs * xs, -1)[:, None] + jnp.sum(xs * xs, -1)[None, :] \
+            - 2.0 * xs @ xs.T
+        d2 = jnp.maximum(d2, 0.0)
+        if kind == "rbf":
+            return os2 * jnp.exp(-0.5 * d2)
+        return os2 * jnp.exp(-jnp.sqrt(d2 + 1e-12))
+    if kind.startswith("sm"):
+        q = int(kind[2:])
+        assert d == 1, "spectral mixture kernel is 1-D here (FX experiment)"
+        w = softplus(theta[:q]) + 1e-8                       # mixture weights
+        mu = softplus(theta[q:2 * q])                        # component means (freq)
+        v = softplus(theta[2 * q:3 * q]) + 1e-8              # component variances
+        tau = x[:, 0][:, None] - x[:, 0][None, :]            # [m, m]
+        t2 = tau * tau
+        k = jnp.zeros_like(t2)
+        for i in range(q):
+            k = k + w[i] * jnp.exp(-2.0 * jnp.pi ** 2 * t2 * v[i]) \
+                * jnp.cos(TWO_PI * mu[i] * tau)
+        return k
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def kernel_xz(kind: str, theta, xa, xb):
+    """Cross covariance k(xa, xb) for the O-SVGP baseline graphs."""
+    xa = jnp.atleast_2d(jnp.asarray(xa, jnp.float32))
+    xb = jnp.atleast_2d(jnp.asarray(xb, jnp.float32))
+    d = xa.shape[-1]
+    if kind in ("rbf", "matern12"):
+        ls = softplus(theta[:d]) + 1e-6
+        os2 = softplus(theta[d]) + 1e-6
+        a = xa / ls[None, :]
+        b = xb / ls[None, :]
+        d2 = jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :] - 2.0 * a @ b.T
+        d2 = jnp.maximum(d2, 0.0)
+        if kind == "rbf":
+            return os2 * jnp.exp(-0.5 * d2)
+        return os2 * jnp.exp(-jnp.sqrt(d2 + 1e-12))
+    if kind.startswith("sm"):
+        q = int(kind[2:])
+        w = softplus(theta[:q]) + 1e-8
+        mu = softplus(theta[q:2 * q])
+        v = softplus(theta[2 * q:3 * q]) + 1e-8
+        tau = xa[:, 0][:, None] - xb[:, 0][None, :]
+        t2 = tau * tau
+        k = jnp.zeros_like(t2)
+        for i in range(q):
+            k = k + w[i] * jnp.exp(-2.0 * jnp.pi ** 2 * t2 * v[i]) \
+                * jnp.cos(TWO_PI * mu[i] * tau)
+        return k
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def kernel_diag(kind: str, theta, x):
+    """k(x, x) diagonal."""
+    x = jnp.atleast_2d(jnp.asarray(x, jnp.float32))
+    b, d = x.shape
+    if kind in ("rbf", "matern12"):
+        os2 = softplus(theta[d]) + 1e-6
+        return jnp.full((b,), os2)
+    if kind.startswith("sm"):
+        q = int(kind[2:])
+        w = softplus(theta[:q]) + 1e-8
+        return jnp.full((b,), jnp.sum(w))
+    raise ValueError(f"unknown kernel kind {kind!r}")

@@ -1,0 +1,88 @@
+"""Pallas kernel: MXU-tiled dense matmul for K_UU-sided products.
+
+The WISKI MLL/predict path is dominated by products of the m x m lattice
+covariance with skinny matrices: K_UU @ L (m x r), K_UU @ Wty (m x 1-padded)
+and L^T @ (K_UU L) (r x r).  When K_UU has Toeplitz/Kronecker structure the
+L2 graph uses the FFT path instead (model.py); this kernel is the general
+dense fallback (non-stationary kernels, learned-projection feature spaces)
+and the piece that maps onto the MXU systolic array on real TPU hardware.
+
+Tiling: classic (i, j, k) block matmul. Blocks default to 128 x 128 — the
+MXU native tile — with an f32 VMEM accumulator; per-program VMEM is
+3 * 128 * 128 * 4 B = 192 KiB.  The k-loop is the innermost grid dimension
+so the accumulator tile stays resident while A/B tiles stream through
+(double-buffered by the Pallas pipeline on real hardware).
+
+interpret=True is mandatory on this CPU-PJRT image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-flavored scratch shapes work under interpret mode too.
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _accum(shape):
+        return pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover - older jax without the tpu namespace
+    def _accum(shape):
+        return pl.MemorySpace.ANY
+
+DEFAULT_BLOCK = 128
+
+
+def pick_block(n: int, cap: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of n that is <= cap (m = g^d is not always 128-divisible:
+    the BO grid has m = 1000 -> 125, the malaria grid m = 900 -> 100)."""
+    for cand in range(min(cap, n), 0, -1):
+        if n % cand == 0:
+            return cand
+    return 1
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    """Grid (i, j, k): o[i, j] = sum_k a[i, k] @ b[k, j], f32 accumulate."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(a, b, *, block_m: int = DEFAULT_BLOCK, block_n: int = DEFAULT_BLOCK,
+           block_k: int = DEFAULT_BLOCK):
+    """C = A @ B with MXU-style tiling. Shapes must divide the block sizes."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = pick_block(m, block_m), pick_block(n, block_n), pick_block(k, block_k)
+    nk = k // bk
+    kernel = functools.partial(_matmul_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[_accum((bm, bn))],
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Pallas kernel: fused symmetric rank-one accumulate C <- C + c * q q^T.
+
+The per-observation core update (A = U C U^T bookkeeping, see
+kernels/ref.py:basis_update_ref) adds an outer product into the r x r core
+every step.  This kernel fuses the outer product and the add so C streams
+through VMEM once per update instead of materializing q q^T.
+
+VMEM per program: BLOCK * r * 4 B for the C tile + r * 4 B for q.
+
+interpret=True is mandatory on this CPU-PJRT image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _outer_kernel(c_ref, q_ref, s_ref, o_ref, *, block: int):
+    """o = c + s * q_block q^T for one row-block of C."""
+    i = pl.program_id(0)
+    q_row = q_ref[...]                                   # [1, r] full vector
+    start = i * block
+    q_blk = jax.lax.dynamic_slice(q_row, (0, start), (1, block))  # rows' q vals
+    s = s_ref[0, 0]
+    o_ref[...] = c_ref[...] + s * q_blk.T * q_row
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def outer_update(core, q, scale, *, block: int = DEFAULT_BLOCK):
+    """Fused C + scale * q q^T over row-blocks of the r x r core."""
+    core = jnp.asarray(core, jnp.float32)
+    r = core.shape[0]
+    from .kuu_matvec import pick_block
+
+    b = pick_block(r, block)
+    q2 = jnp.asarray(q, jnp.float32).reshape(1, r)
+    s2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_outer_kernel, block=b)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // b,),
+        in_specs=[
+            pl.BlockSpec((b, r), lambda i: (i, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(core, q2, s2)

@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `*_ref` counterpart to float32 tolerance across a hypothesis
+sweep of shapes (see python/tests/test_kernel.py).
+
+The SKI primitive is cubic-convolution interpolation (Keys 1981, a = -1/2):
+for a query u (in fractional grid units) the four taps at offsets
+floor(u)-1 .. floor(u)+2 carry tensor-product weights; a point therefore has
+exactly 4^d non-zeros in its row of W.  We materialize rows *densely* over
+the m = g^d lattice (m is small by construction), which turns the scatter
+the GPU implementation would do into a fully vectorized masked compute —
+the natural TPU/VPU formulation (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cubic_kernel(s):
+    """Keys' cubic convolution kernel with a = -1/2.
+
+    w(s) = 1.5|s|^3 - 2.5|s|^2 + 1          for |s| <= 1
+         = -0.5|s|^3 + 2.5|s|^2 - 4|s| + 2  for 1 < |s| < 2
+         = 0                                otherwise
+    """
+    t = jnp.abs(s)
+    w1 = (1.5 * t - 2.5) * t * t + 1.0
+    w2 = ((-0.5 * t + 2.5) * t - 4.0) * t + 2.0
+    return jnp.where(t <= 1.0, w1, jnp.where(t < 2.0, w2, 0.0))
+
+
+def interp_weights_1d_ref(x, g, lo=-1.0, hi=1.0):
+    """Dense cubic interpolation weights of points x[(b,)] on a g-point grid.
+
+    Returns W[b, g] with rows summing to 1 for interior points.  Queries are
+    clamped to the valid interior in *grid units* so that all four taps
+    exist (same convention as the GPyTorch SKI implementation, which clamps
+    edge points).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    h = (hi - lo) / (g - 1)
+    u = (x - lo) / h                                    # fractional grid coords
+    u = jnp.clip(u, 1.0, g - 2.0 - 1e-6)                # keep 4-tap stencil inside
+    j = jnp.arange(g, dtype=jnp.float32)                # lattice coordinates
+    s = u[:, None] - j[None, :]                         # [b, g] signed distances
+    return cubic_kernel(s) * (jnp.abs(s) < 2.0)
+
+
+def interp_weights_ref(x, g, lo=-1.0, hi=1.0):
+    """Dense tensor-product interpolation rows W[b, g^d] for x[b, d].
+
+    Row-major lattice layout: index = j_0 * g^(d-1) + ... + j_{d-1}; this
+    matches `lattice_coords` below and the Rust mirror in rust/src/gp/ski.rs.
+    """
+    x = jnp.atleast_2d(jnp.asarray(x, jnp.float32))
+    b, d = x.shape
+    w = interp_weights_1d_ref(x[:, 0], g, lo, hi)
+    for k in range(1, d):
+        wk = interp_weights_1d_ref(x[:, k], g, lo, hi)
+        w = (w[:, :, None] * wk[:, None, :]).reshape(b, -1)
+    return w
+
+
+def lattice_coords(g, d, lo=-1.0, hi=1.0):
+    """Coordinates of the m = g^d lattice points, row-major. Returns [m, d]."""
+    axes = [jnp.linspace(lo, hi, g) for _ in range(d)]
+    mesh = jnp.meshgrid(*axes, indexing="ij")
+    return jnp.stack([mm.reshape(-1) for mm in mesh], axis=-1).astype(jnp.float32)
+
+
+def matmul_ref(a, b):
+    """f32 reference for the MXU-tiled matmul kernel."""
+    return jnp.matmul(a, b, precision="highest")
+
+
+def basis_update_ref(u_basis, core, w, k_rank, tol=1e-4):
+    """Reference rank-one update of the W^T W factorization A = U C U^T.
+
+    U (m x r) holds an orthonormal basis of the observed interpolation-row
+    span, C (r x r) the PSD core, k the effective rank.  Folding a new row w:
+
+      p = U^T w, w_perp = w - U p (one re-orthogonalization pass), rho = |w_perp|
+      grow (k < r, rho significant):  U += (w_perp/rho) e_k^T and
+                                      C += q q^T with q = p + rho e_k  (exact)
+      saturated:                      C += p p^T  (residual dropped — the
+                                      approximation regime of Table 1)
+
+    This replaces the paper's L/J (root + pseudo-inverse-root) bookkeeping:
+    maintaining pinv(L) by Greville/Gill rank-one updates is numerically
+    treacherous when a nearly-in-span column arrives (error amplified by
+    1/rho^2 — it destroyed f32 accuracy in our first implementation), while
+    the orthonormal-basis form never divides by rho^2.  The paper's root is
+    recovered as L_eff = U chol(C), so all Eq. 11-15 expressions are reused
+    verbatim with L -> L_eff (DESIGN.md §5).
+
+    Fixed-shape (both branches blended with jnp.where), AOT-friendly.
+    """
+    m, r = u_basis.shape
+    p = u_basis.T @ w                                   # [r]
+    w_perp = w - u_basis @ p
+    # second Gram-Schmidt pass keeps U orthonormal to machine precision
+    corr = u_basis.T @ w_perp
+    w_perp = w_perp - u_basis @ corr
+    p_full = p + corr
+    rho2 = jnp.sum(w_perp * w_perp)
+    rho = jnp.sqrt(jnp.maximum(rho2, 1e-30))
+    wnorm2 = jnp.maximum(jnp.sum(w * w), 1e-30)
+
+    grow = (k_rank < r) & (rho2 > tol * tol * wnorm2)
+    gmask = jnp.where(grow, 1.0, 0.0)
+    onehot = (jnp.arange(r) == k_rank).astype(u_basis.dtype)  # e_k
+
+    u_new = u_basis + gmask * (w_perp / rho)[:, None] * onehot[None, :]
+    q = p_full + gmask * rho * onehot
+    c_new = core + q[:, None] * q[None, :]
+    return u_new, c_new, k_rank + gmask.astype(k_rank.dtype)

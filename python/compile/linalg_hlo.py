@@ -1,0 +1,163 @@
+"""Pure-HLO linear algebra for AOT artifacts.
+
+jax's stock `jnp.linalg.{cholesky,solve,eigh,svd}` lower to LAPACK FFI
+custom-calls (`lapack_spotrf_ffi`, ...) that the runtime on the Rust side —
+xla_extension 0.5.1's CPU client — does not register, so any artifact using
+them fails to compile at load time.  This module reimplements the small-
+matrix factorizations WISKI needs out of basic HLO ops only (while loops +
+dynamic slices), and wraps them in `custom_vjp` rules so reverse-mode
+autodiff (the hyperparameter gradient path) never unrolls the loops.
+
+Everything here targets the r x r inner system Q = I + L^T K_UU L / sigma^2
+(r <= ~1024) and the m x m variational systems of the O-SVGP baseline
+(m <= ~1024), where an O(n^3) loop-based factorization is cheap.
+
+Correctness oracle: numpy/scipy, exercised in python/tests/test_linalg_hlo.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chol(a, jitter: float = 0.0):
+    """Lower Cholesky factor of SPD `a` via a column-sweep fori_loop.
+
+    Pure HLO (while + dynamic_update_slice).  Not differentiable on its own;
+    use `spd_solve` / `spd_logdet` which carry custom VJPs.
+    """
+    a = jnp.asarray(a)
+    r = a.shape[0]
+    if jitter:
+        a = a + jitter * jnp.eye(r, dtype=a.dtype)
+    idx = jnp.arange(r)
+
+    # Pivot floor: for rank-deficient inputs (the cache core C has rank
+    # krank < r) the trailing pivots are pure f32 roundoff; flooring them at
+    # the jitter scale (not a denormal) keeps 1/sqrt(piv) bounded, otherwise
+    # the zero-tail columns blow up to ~1e9 and poison everything downstream.
+    floor = max(jitter, 1e-12)
+
+    def body(j, l_acc):
+        # v = a[:, j] - L[:, :j] @ L[j, :j]^T, using the zero-initialized tail.
+        lj = lax.dynamic_slice_in_dim(l_acc, j, 1, axis=0)[0]          # row j
+        lj = jnp.where(idx < j, lj, 0.0)
+        v = lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0] - l_acc @ lj
+        piv = jnp.maximum(lax.dynamic_slice_in_dim(v, j, 1)[0], floor)
+        col = v / jnp.sqrt(piv)
+        # clamp the column by the Cauchy-Schwarz bound |l_ij| <= sqrt(a_ii):
+        # keeps roundoff in fully-deflated columns from amplifying.
+        col = jnp.where(idx >= j, col, 0.0)
+        return lax.dynamic_update_slice_in_dim(l_acc, col[:, None], j, axis=1)
+
+    return lax.fori_loop(0, r, body, jnp.zeros_like(a))
+
+
+def tri_solve_lower(l, b):
+    """Solve L x = b with L lower-triangular; b is [r] or [r, k]. Pure HLO."""
+    l = jnp.asarray(l)
+    b2 = jnp.asarray(b)
+    squeeze = b2.ndim == 1
+    if squeeze:
+        b2 = b2[:, None]
+    r = l.shape[0]
+
+    def body(i, x):
+        li = lax.dynamic_slice_in_dim(l, i, 1, axis=0)[0]              # row i
+        mask = jnp.arange(r) < i
+        acc = (jnp.where(mask, li, 0.0)[None, :] @ x)[0]               # [k]
+        bi = lax.dynamic_slice_in_dim(b2, i, 1, axis=0)[0]
+        lii = lax.dynamic_slice_in_dim(li, i, 1)[0]
+        xi = (bi - acc) / lii
+        return lax.dynamic_update_slice_in_dim(x, xi[None, :], i, axis=0)
+
+    x = lax.fori_loop(0, r, body, jnp.zeros_like(b2))
+    return x[:, 0] if squeeze else x
+
+
+def tri_solve_upper(u, b):
+    """Solve U x = b with U upper-triangular (used as L^T solves). Pure HLO."""
+    u = jnp.asarray(u)
+    b2 = jnp.asarray(b)
+    squeeze = b2.ndim == 1
+    if squeeze:
+        b2 = b2[:, None]
+    r = u.shape[0]
+
+    def body(t, x):
+        i = r - 1 - t
+        ui = lax.dynamic_slice_in_dim(u, i, 1, axis=0)[0]
+        mask = jnp.arange(r) > i
+        acc = (jnp.where(mask, ui, 0.0)[None, :] @ x)[0]
+        bi = lax.dynamic_slice_in_dim(b2, i, 1, axis=0)[0]
+        uii = lax.dynamic_slice_in_dim(ui, i, 1)[0]
+        xi = (bi - acc) / uii
+        return lax.dynamic_update_slice_in_dim(x, xi[None, :], i, axis=0)
+
+    x = lax.fori_loop(0, r, body, jnp.zeros_like(b2))
+    return x[:, 0] if squeeze else x
+
+
+def _chol_solve(l, b):
+    """Solve (L L^T) x = b given the Cholesky factor."""
+    return tri_solve_upper(l.T, tri_solve_lower(l, b))
+
+
+# --- differentiable SPD solve -------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spd_solve(a, b, jitter: float = 1e-6):
+    """x = (a + jitter I)^{-1} b for SPD a; b is [r] or [r, k].
+
+    Reverse mode: d/da = -gbar x^T (symmetrized by the caller's symmetric a),
+    d/db = (a + jitter I)^{-1} gbar — one extra pair of triangular solves,
+    never differentiating through the factorization loop.
+    """
+    return _chol_solve(chol(a, jitter), b)
+
+
+def _spd_solve_fwd(a, b, jitter):
+    l = chol(a, jitter)
+    x = _chol_solve(l, b)
+    return x, (l, x)
+
+
+def _spd_solve_bwd(jitter, res, gbar):
+    l, x = res
+    ginv = _chol_solve(l, gbar)
+    if x.ndim == 1:
+        da = -jnp.outer(ginv, x)
+    else:
+        da = -ginv @ x.T
+    return da, ginv
+
+
+spd_solve.defvjp(_spd_solve_fwd, _spd_solve_bwd)
+
+
+# --- differentiable SPD logdet ------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spd_logdet(a, jitter: float = 1e-6):
+    """log|a + jitter I| for SPD a. Reverse mode: d/da = (a + jitter I)^{-1}."""
+    l = chol(a, jitter)
+    return 2.0 * jnp.sum(jnp.log(jnp.abs(jnp.diagonal(l)) + 1e-30))
+
+
+def _spd_logdet_fwd(a, jitter):
+    l = chol(a, jitter)
+    val = 2.0 * jnp.sum(jnp.log(jnp.abs(jnp.diagonal(l)) + 1e-30))
+    return val, l
+
+
+def _spd_logdet_bwd(jitter, l, gbar):
+    r = l.shape[0]
+    inv = _chol_solve(l, jnp.eye(r, dtype=l.dtype))
+    return (gbar * inv,)
+
+
+spd_logdet.defvjp(_spd_logdet_fwd, _spd_logdet_bwd)

@@ -1,0 +1,275 @@
+"""L2: the WISKI model — constant-time online SKI Gaussian processes.
+
+Implements the paper's Section 4 in functional jax, with every online
+operation **fixed-shape** (the whole point of WISKI: posterior state is
+compressed into caches whose size depends only on m and r, never on n):
+
+  caches = { wty [m], yty [], n [], U [m, r], C [r, r], krank [] }
+
+  * wty     = W^T y  (interpolated target accumulator, Eq. 16)
+  * yty     = y^T y  (Eq. 17)
+  * U C U^T = W^T W  with U orthonormal, C PSD — the rank-r factorization
+    the paper writes as L L^T.  The paper maintains (L, J ~ pinv-root) by
+    Gill et al. rank-one updates; we maintain (U, C) instead, which is the
+    same object (L_eff = U chol(C)) but unconditionally stable — see
+    kernels/ref.py:basis_update_ref for the rationale.
+  * krank   = effective rank (grows to r, then residuals are dropped — the
+    regime the paper's Table 1 ablates).
+
+Key quantities (paper Eq. 5-15, re-derived in DESIGN.md §5), with
+L = U Ch, Ch = chol(C):
+  Q    = I_r + L^T K_UU L / s2  = I_r + Ch^T (U^T K U) Ch / s2   (Eq. 12)
+  MLL  = -[yty - wty^T K wty / s2 + a^T Q^{-1} a] / (2 s2)
+         - [log|Q| + n log s2]/2 - n/2 log 2pi,   a = L^T K wty / s2 (Eq. 13)
+  mean = w*^T K (wty - L Q^{-1} a) / s2                           (Eq. 14)
+  var  = w*^T K w* - (L^T K w*)^T Q^{-1} (L^T K w*) / s2          (Eq. 10/15)
+
+Heteroscedastic fixed-noise observations (Dirichlet classification, A.5)
+reuse the same caches by accumulating the *scaled* row w/s and target y/s
+and fixing sigma^2 = 1; the `s` input of `condition` carries the per-point
+noise scale (s = 1 for homoscedastic regression, where sigma comes from
+theta).
+
+No jnp.linalg anywhere: the Rust-side runtime (xla_extension 0.5.1) cannot
+execute LAPACK custom-calls, so factorizations go through linalg_hlo and
+the big matmuls through the Pallas kernels in kernels/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import covfns
+from .linalg_hlo import chol, spd_logdet, spd_solve
+from .kernels import interp as interp_k
+from .kernels import kuu_matvec
+from .kernels import outer
+from .kernels.ref import lattice_coords
+
+LOG_2PI = 1.8378770664093453
+Q_JITTER = 1e-4
+# C is PSD with rank krank <= r; the jitter keeps its Cholesky's deflated
+# tail bounded (see linalg_hlo.chol). 1e-4 relative to O(1) diagonal entries
+# is far below the interpolation error floor of SKI itself.
+C_JITTER = 1e-4
+
+
+# --- Pallas matmul with a custom VJP (theta-gradient path goes through it) ----
+
+@jax.custom_vjp
+def pmatmul(a, b):
+    """A @ B through the MXU-tiled Pallas kernel, differentiable."""
+    return kuu_matvec.matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return kuu_matvec.matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    return kuu_matvec.matmul(g, b.T), kuu_matvec.matmul(a.T, g)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+# --- caches -------------------------------------------------------------------
+
+def init_caches(m: int, r: int):
+    """Empty caches (n = 0). All f32 so the Rust side sees one dtype."""
+    return {
+        "wty": jnp.zeros((m,), jnp.float32),
+        "yty": jnp.zeros((), jnp.float32),
+        "n": jnp.zeros((), jnp.float32),
+        "U": jnp.zeros((m, r), jnp.float32),
+        "C": jnp.zeros((r, r), jnp.float32),
+        "krank": jnp.zeros((), jnp.float32),
+    }
+
+
+def cache_spec(m: int, r: int):
+    """(name, shape) list fixing the artifact calling convention order."""
+    return [
+        ("wty", (m,)),
+        ("yty", ()),
+        ("n", ()),
+        ("U", (m, r)),
+        ("C", (r, r)),
+        ("krank", ()),
+    ]
+
+
+CACHE_KEYS = ("wty", "yty", "n", "U", "C", "krank")
+
+
+def _pack(caches):
+    return tuple(caches[k] for k in CACHE_KEYS)
+
+
+def _unpack(*vals):
+    return dict(zip(CACHE_KEYS, vals))
+
+
+# --- conditioning on new observations (paper §4.2) -----------------------------
+
+def _basis_update(u_basis, core, w, krank, tol=1e-4):
+    """Rank-one update of A = U C U^T <- A + w w^T (kernels/ref.py docs)."""
+    m, r = u_basis.shape
+    p = u_basis.T @ w
+    w_perp = w - u_basis @ p
+    corr = u_basis.T @ w_perp                  # 2nd Gram-Schmidt pass
+    w_perp = w_perp - u_basis @ corr
+    p_full = p + corr
+    rho2 = jnp.sum(w_perp * w_perp)
+    rho = jnp.sqrt(jnp.maximum(rho2, 1e-30))
+    wnorm2 = jnp.maximum(jnp.sum(w * w), 1e-30)
+
+    grow = (krank < r) & (rho2 > tol * tol * wnorm2)
+    gmask = jnp.where(grow, 1.0, 0.0)
+    onehot = (jnp.arange(r, dtype=jnp.float32) == krank).astype(jnp.float32)
+
+    u_new = u_basis + gmask * (w_perp / rho)[:, None] * onehot[None, :]
+    q = p_full + gmask * rho * onehot
+    c_new = outer.outer_update(core, q, 1.0)   # fused Pallas pass
+    return u_new, c_new, krank + gmask
+
+
+def condition(caches, w_rows, y, s, mask):
+    """Fold a batch of q observations into the caches (Eqs. 16-17 + basis).
+
+    w_rows: [q, m] interpolation rows; y: [q]; s: [q] per-point noise scale
+    (1 for homoscedastic regression, sigma_i for fixed-noise likelihoods);
+    mask: [q] in {0,1} so partially filled batches AOT-compile fixed-shape.
+    """
+    w_rows = w_rows / s[:, None]
+    y_sc = y / s
+
+    def fold(c, inp):
+        w, yi, mi = inp
+        u_new, c_new, k_new = _basis_update(c["U"], c["C"], w, c["krank"])
+        out = {
+            "wty": c["wty"] + mi * yi * w,
+            "yty": c["yty"] + mi * yi * yi,
+            "n": c["n"] + mi,
+            "U": jnp.where(mi > 0, u_new, c["U"]),
+            "C": jnp.where(mi > 0, c_new, c["C"]),
+            "krank": jnp.where(mi > 0, k_new, c["krank"]),
+        }
+        return out, ()
+
+    caches, _ = lax.scan(fold, caches, (w_rows, y_sc, mask))
+    return caches
+
+
+# --- shared Q-system pieces -----------------------------------------------------
+
+def _q_system(theta, caches, kind, lattice):
+    """Returns (k_uu, ch, q_mat, a, sig2, k_wty).
+
+    ch = chol(C): constant w.r.t. theta, so autodiff never touches the
+    factorization loop.  Q = I + Ch^T (U^T K U) Ch / s2.
+    """
+    sig2 = covfns.noise_var(kind, theta)
+    k_uu = covfns.kuu(kind, theta, lattice)
+    ku = pmatmul(k_uu, caches["U"])                        # [m, r] MXU path
+    r = caches["U"].shape[1]
+    ch = chol(caches["C"], C_JITTER)                       # [r, r] lower
+    t_mat = caches["U"].T @ ku                             # [r, r]
+    q_mat = jnp.eye(r, dtype=jnp.float32) + (ch.T @ (t_mat @ ch)) / sig2
+    k_wty = k_uu @ caches["wty"]
+    a = ch.T @ (caches["U"].T @ k_wty) / sig2
+    return k_uu, ku, ch, q_mat, a, sig2, k_wty
+
+
+# --- marginal log likelihood (Eq. 13) ------------------------------------------
+
+def mll(theta, caches, *, kind, lattice):
+    """Marginal log likelihood, O(m^2 r) flops, independent of n."""
+    _, _, _, q_mat, a, sig2, k_wty = _q_system(theta, caches, kind, lattice)
+    qa = spd_solve(q_mat, a, Q_JITTER)
+    # y^T W M W^T y = wty^T K wty / s2 - a^T Q^{-1} a
+    ymy = (caches["wty"] @ k_wty) / sig2 - a @ qa
+    quad = -(caches["yty"] - ymy) / (2.0 * sig2)
+    logdet = -(spd_logdet(q_mat, Q_JITTER) + caches["n"] * jnp.log(sig2)) / 2.0
+    return quad + logdet - caches["n"] / 2.0 * LOG_2PI
+
+
+# --- prediction (Eqs. 14, 15) ---------------------------------------------------
+
+def predict(theta, caches, w_star, *, kind, lattice):
+    """Posterior mean and latent variance at query rows w_star [b, m]."""
+    k_uu, ku, ch, q_mat, a, sig2, k_wty = _q_system(theta, caches, kind, lattice)
+    b_vec = spd_solve(q_mat, a, Q_JITTER)
+    # mean cache = K (wty - L Q^{-1} a)/s2 with L = U Ch
+    mean_cache = (k_wty - ku @ (ch @ b_vec)) / sig2        # [m]
+    mean = w_star @ mean_cache
+
+    kw = pmatmul(k_uu, w_star.T)                           # [m, b]
+    a2 = ch.T @ (caches["U"].T @ kw)                       # [r, b]
+    s2_solve = spd_solve(q_mat, a2, Q_JITTER)              # [r, b]
+    var = jnp.sum(w_star.T * kw, axis=0) - jnp.sum(a2 * s2_solve, axis=0) / sig2
+    return mean, jnp.maximum(var, 1e-10)
+
+
+# --- one full online step (Algorithm 1) -----------------------------------------
+
+def make_step_fn(*, kind: str, g: int, d: int, r: int, q: int):
+    """Build the fixed-shape `wiski_step` function for AOT lowering.
+
+    step(theta, *caches, x[q,d], y[q], s[q], mask[q]) ->
+        (new caches..., mll, grad_theta)
+
+    Conditions on the (masked) batch, then evaluates the MLL and its theta
+    gradient on the *updated* caches (Algorithm 1 ordering).
+    """
+    lattice = lattice_coords(g, d)
+    m = g ** d
+
+    def step(theta, wty, yty, n, u_basis, core, krank, x, y, s, mask):
+        caches = _unpack(wty, yty, n, u_basis, core, krank)
+        w_rows = interp_k.interp_weights(x, g=g, d=d)
+        caches = condition(caches, w_rows, y, s, mask)
+        val, grad = jax.value_and_grad(
+            lambda th: mll(th, caches, kind=kind, lattice=lattice))(theta)
+        return _pack(caches) + (val, grad)
+
+    step.__name__ = f"wiski_step_{kind}_d{d}_g{g}_r{r}_q{q}"
+    step.meta = dict(kind=kind, g=g, d=d, r=r, q=q, m=m)
+    return step
+
+
+def make_predict_fn(*, kind: str, g: int, d: int, r: int, b: int):
+    """Build the fixed-shape `wiski_predict` function for AOT lowering.
+
+    predict(theta, *caches, xstar[b,d]) -> (mean[b], var_latent[b], sig2)
+    """
+    lattice = lattice_coords(g, d)
+
+    def predict_fn(theta, wty, yty, n, u_basis, core, krank, xstar):
+        caches = _unpack(wty, yty, n, u_basis, core, krank)
+        w_star = interp_k.interp_weights(xstar, g=g, d=d)
+        mean, var = predict(theta, caches, w_star, kind=kind, lattice=lattice)
+        sig2 = covfns.noise_var(kind, theta)
+        return mean, var, sig2
+
+    predict_fn.__name__ = f"wiski_predict_{kind}_d{d}_g{g}_r{r}_b{b}"
+    predict_fn.meta = dict(kind=kind, g=g, d=d, r=r, b=b, m=g ** d)
+    return predict_fn
+
+
+def make_mll_fn(*, kind: str, g: int, d: int, r: int):
+    """Build `wiski_mll_grad` (refit loops re-evaluate MLL without new data)."""
+    lattice = lattice_coords(g, d)
+
+    def mll_fn(theta, wty, yty, n, u_basis, core, krank):
+        caches = _unpack(wty, yty, n, u_basis, core, krank)
+        val, grad = jax.value_and_grad(
+            lambda th: mll(th, caches, kind=kind, lattice=lattice))(theta)
+        return val, grad
+
+    mll_fn.__name__ = f"wiski_mll_{kind}_d{d}_g{g}_r{r}"
+    mll_fn.meta = dict(kind=kind, g=g, d=d, r=r, m=g ** d)
+    return mll_fn

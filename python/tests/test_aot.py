@@ -1,0 +1,64 @@
+"""AOT pipeline: registry sanity, manifest format, HLO text properties."""
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, covfns
+
+
+def test_registry_names_unique_and_well_formed():
+    arts = aot.build_registry()
+    names = [a[0] for a in arts]
+    assert len(names) == len(set(names))
+    for name in names:
+        assert re.match(r"^(wiski|osvgp)_[a-z0-9_]+$", name), name
+
+
+def test_registry_specs_consistent():
+    for name, fn, in_specs, in_names, out_names, meta in aot.build_registry():
+        assert len(in_specs) == len(in_names), name
+        if name.startswith("wiski_step"):
+            m, r, q, d = meta["m"], meta["r"], meta["q"], meta["d"]
+            # caches come in the canonical order with the right shapes
+            assert in_names[1:7] == ["wty", "yty", "n", "U", "C", "krank"]
+            assert in_specs[1].shape == (m,)
+            assert in_specs[4].shape == (m, r)
+            assert in_specs[5].shape == (r, r)
+            assert in_specs[7].shape == (q, d)
+            assert out_names[-2:] == ["mll", "grad_theta"]
+            assert in_specs[0].shape == (covfns.theta_dim(meta["kind"], d),)
+
+
+def test_lowered_hlo_has_no_lapack_custom_calls():
+    # the runtime (xla_extension 0.5.1) cannot execute LAPACK FFI custom
+    # calls; every artifact must be pure HLO (+ while loops).
+    fam = aot.wiski_family("rbf", 1, 8, 8, q=1, b=8)
+    for name, fn, in_specs, *_ in fam[:1]:
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = aot.to_hlo_text(lowered)
+        assert "custom_call_target" not in text, name
+        assert "{...}" not in text, "elided large constants would load as zeros"
+
+
+def test_manifest_written_matches_artifacts(tmp_path):
+    import subprocess, sys
+    # build just the tiny family into a temp dir via the module CLI
+    env = dict(os.environ)
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+         "--only", "wiski_mll_rbf_d2_g16_r128"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "artifact wiski_mll_rbf_d2_g16_r128" in manifest
+    assert (tmp_path / "wiski_mll_rbf_d2_g16_r128.hlo.txt").exists()
+    # stanza structure: in lines count = 7 (theta + 6 caches)
+    stanza = manifest.split("artifact wiski_mll_rbf_d2_g16_r128")[1]
+    assert stanza.count("\nin ") == 7
+    assert stanza.count("\nout ") == 2

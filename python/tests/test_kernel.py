@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes; every kernel must match its ref to f32
+tolerance for all of them.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from compile.kernels import interp, kuu_matvec, outer, ref
+
+
+def test_interp_matches_ref_2d():
+    x = np.random.RandomState(0).uniform(-1, 1, (16, 2)).astype(np.float32)
+    w_k = interp.interp_weights(x, g=16, d=2)
+    w_r = ref.interp_weights_ref(x, 16)
+    np.testing.assert_allclose(np.array(w_k), np.array(w_r), atol=1e-5)
+
+
+def test_interp_rows_are_partition_of_unity():
+    x = np.random.RandomState(1).uniform(-0.7, 0.7, (24, 2)).astype(np.float32)
+    w = np.array(interp.interp_weights(x, g=16, d=2))
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+    assert ((w != 0).sum(-1) <= 16).all()  # 4^2 nonzeros
+
+
+def test_interp_reproduces_linear_function():
+    # cubic convolution interpolation is exact on degree-1 polynomials
+    g = 32
+    lat = np.array(ref.lattice_coords(g, 1))
+    vals = 2.0 * lat[:, 0] + 0.5
+    x = np.linspace(-0.8, 0.8, 40).reshape(-1, 1).astype(np.float32)
+    w = np.array(interp.interp_weights(x, g=g, d=1))
+    np.testing.assert_allclose(w @ vals, 2.0 * x[:, 0] + 0.5, atol=1e-5)
+
+
+def test_matmul_matches_ref():
+    rng = np.random.RandomState(2)
+    a = rng.randn(256, 256).astype(np.float32)
+    b = rng.randn(256, 128).astype(np.float32)
+    np.testing.assert_allclose(
+        np.array(kuu_matvec.matmul(a, b)),
+        np.array(ref.matmul_ref(a, b)),
+        atol=1e-3,
+    )
+
+
+def test_matmul_non_pow2_shapes():
+    # the BO grid gives m=1000, malaria m=900: block auto-pick must handle
+    rng = np.random.RandomState(3)
+    for (m, k, n) in [(100, 100, 36), (90, 90, 12), (125, 125, 64)]:
+        a = rng.randn(m, k).astype(np.float32)
+        b = rng.randn(k, n).astype(np.float32)
+        np.testing.assert_allclose(
+            np.array(kuu_matvec.matmul(a, b)), a @ b, atol=1e-3)
+
+
+def test_outer_update_matches_dense():
+    rng = np.random.RandomState(4)
+    c = rng.randn(64, 64).astype(np.float32)
+    q = rng.randn(64).astype(np.float32)
+    got = np.array(outer.outer_update(c, q, 0.7))
+    np.testing.assert_allclose(got, c + 0.7 * np.outer(q, q), atol=1e-5)
+
+
+def test_basis_update_invariant_stream():
+    # streaming n rows must keep U C U^T == W^T W (growth phase exact)
+    rng = np.random.RandomState(5)
+    m, r, n = 32, 32, 20
+    x = rng.uniform(-0.8, 0.8, (n, 1)).astype(np.float32)
+    w_rows = np.array(ref.interp_weights_ref(x, m))
+    u = jnp.zeros((m, r))
+    c = jnp.zeros((r, r))
+    k = jnp.asarray(0.0)
+    a = np.zeros((m, m))
+    for t in range(n):
+        u, c, k = ref.basis_update_ref(u, c, jnp.asarray(w_rows[t]), k)
+        a += np.outer(w_rows[t], w_rows[t])
+        err = np.abs(np.array(u) @ np.array(c) @ np.array(u).T - a).max()
+        assert err < 1e-3, f"step {t}: err {err}"
+    # U columns orthonormal on the active set
+    k_eff = int(k)
+    ua = np.array(u)[:, :k_eff]
+    np.testing.assert_allclose(ua.T @ ua, np.eye(k_eff), atol=1e-4)
+
+
+def test_basis_update_saturation_drops_residual():
+    rng = np.random.RandomState(6)
+    m, r = 16, 4
+    u = jnp.zeros((m, r))
+    c = jnp.zeros((r, r))
+    k = jnp.asarray(0.0)
+    for t in range(10):
+        w = jnp.asarray(rng.randn(m).astype(np.float32))
+        u, c, k = ref.basis_update_ref(u, c, w, k)
+    assert float(k) == r  # saturated at the cap
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(min_value=1, max_value=12),
+        g=st.sampled_from([8, 12, 16, 24]),
+        d=st.integers(min_value=1, max_value=2),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_interp_hypothesis_shapes(b, g, d, seed):
+        x = np.random.RandomState(seed % 10000).uniform(-1, 1, (b, d)).astype(np.float32)
+        w_k = np.array(interp.interp_weights(x, g=g, d=d))
+        w_r = np.array(ref.interp_weights_ref(x, g))
+        np.testing.assert_allclose(w_k, w_r, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([16, 64, 100, 128]),
+        n=st.sampled_from([1, 4, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matmul_hypothesis_shapes(m, n, seed):
+        rng = np.random.RandomState(seed % 10000)
+        a = rng.randn(m, m).astype(np.float32)
+        b = rng.randn(m, n).astype(np.float32)
+        np.testing.assert_allclose(
+            np.array(kuu_matvec.matmul(a, b)), a @ b,
+            atol=1e-3 * np.sqrt(m))
+else:  # pragma: no cover
+
+    def test_hypothesis_missing():
+        pytest.skip("hypothesis not installed")

@@ -1,0 +1,182 @@
+"""L2 WISKI model vs a direct dense-SKI oracle (numpy).
+
+The decisive correctness tests: with full rank (r = m) WISKI's MLL,
+predictive mean and variance must match the *exact* GP with the SKI kernel
+K = W K_UU W^T + s2 I computed densely in n-space.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import covfns, model
+from compile.kernels.ref import interp_weights_ref, lattice_coords
+
+
+def make_problem(g=16, d=1, n=24, seed=0, kind="rbf"):
+    rng = np.random.RandomState(seed)
+    if kind == "rbf":
+        theta = np.array(
+            [covfns.inv_softplus(0.5)] * d
+            + [covfns.inv_softplus(1.0), covfns.inv_softplus(0.05)],
+            np.float32,
+        )
+    else:
+        raise ValueError(kind)
+    x = rng.uniform(-0.8, 0.8, (n, d)).astype(np.float32)
+    y = (np.sin(3 * x[:, 0]) + 0.1 * rng.randn(n)).astype(np.float32)
+    w = np.array(interp_weights_ref(x, g))
+    return theta, x, y, w
+
+
+def dense_oracle(theta, w, y, g, d, kind="rbf"):
+    lattice = lattice_coords(g, d)
+    kuu = np.array(covfns.kuu(kind, jnp.asarray(theta), lattice))
+    sig2 = float(covfns.noise_var(kind, jnp.asarray(theta)))
+    n = len(y)
+    kski = w @ kuu @ w.T + sig2 * np.eye(n)
+    mll = (
+        -0.5 * y @ np.linalg.solve(kski, y)
+        - 0.5 * np.linalg.slogdet(kski)[1]
+        - n / 2 * np.log(2 * np.pi)
+    )
+    return kuu, kski, mll
+
+
+def stream(theta, w, y, g, d, r):
+    m = g ** d
+    caches = model.init_caches(m, r)
+    ones = jnp.ones(len(y))
+    return model.condition(caches, jnp.asarray(w), jnp.asarray(y), ones, ones)
+
+
+class TestFullRankExactness:
+    def test_mll_matches_dense_oracle(self):
+        theta, x, y, w = make_problem()
+        caches = stream(theta, w, y, 16, 1, 16)
+        lattice = lattice_coords(16, 1)
+        got = float(model.mll(jnp.asarray(theta), caches, kind="rbf", lattice=lattice))
+        _, _, want = dense_oracle(theta, w, y, 16, 1)
+        assert abs(got - want) < 0.05, (got, want)
+
+    def test_predictions_match_dense_oracle(self):
+        theta, x, y, w = make_problem(seed=1)
+        caches = stream(theta, w, y, 16, 1, 16)
+        lattice = lattice_coords(16, 1)
+        kuu, kski, _ = dense_oracle(theta, w, y, 16, 1)
+        xs = np.random.RandomState(2).uniform(-0.8, 0.8, (10, 1)).astype(np.float32)
+        ws = np.array(interp_weights_ref(xs, 16))
+        mean, var = model.predict(jnp.asarray(theta), caches, jnp.asarray(ws),
+                                  kind="rbf", lattice=lattice)
+        kxs = ws @ kuu @ w.T
+        mean_ref = kxs @ np.linalg.solve(kski, y)
+        var_ref = np.diag(ws @ kuu @ ws.T) - np.einsum(
+            "ij,ij->i", kxs, np.linalg.solve(kski, kxs.T).T)
+        np.testing.assert_allclose(np.array(mean), mean_ref, atol=2e-3)
+        np.testing.assert_allclose(np.array(var), var_ref, atol=2e-3)
+
+    def test_grad_matches_finite_differences(self):
+        theta, x, y, w = make_problem(seed=3)
+        caches = stream(theta, w, y, 16, 1, 16)
+        lattice = lattice_coords(16, 1)
+        f = lambda th: model.mll(th, caches, kind="rbf", lattice=lattice)
+        g = np.array(jax.grad(f)(jnp.asarray(theta)))
+        # f32 central differences are noisy (MLL values O(10), eps trade-off
+        # between truncation and cancellation); the bitwise-precise VJP
+        # check lives in test_linalg_hlo.py::test_vjp_matches_finite_differences.
+        eps = 3e-2
+        for i in range(len(theta)):
+            tp, tm = theta.copy(), theta.copy()
+            tp[i] += eps
+            tm[i] -= eps
+            fd = (float(f(jnp.asarray(tp))) - float(f(jnp.asarray(tm)))) / (2 * eps)
+            assert abs(g[i] - fd) < 0.2 * max(1.0, abs(fd)), (i, g[i], fd)
+
+
+class TestLowRank:
+    def test_low_rank_exact_on_clustered_data(self):
+        # inputs concentrated on a few sites -> W^T W has low effective rank
+        # -> a small r loses nothing (the regime where the paper's r < m
+        # works); spread data instead genuinely needs r ~ m (Table 1).
+        rng = np.random.RandomState(4)
+        centers = np.array([-0.6, 0.0, 0.55])
+        x = (centers[rng.randint(0, 3, 40)] + 0.004 * rng.randn(40)).reshape(-1, 1).astype(np.float32)
+        y = np.sin(3 * x[:, 0]).astype(np.float32)
+        w = np.array(interp_weights_ref(x, 32))
+        theta = np.array([covfns.inv_softplus(0.5), covfns.inv_softplus(1.0),
+                          covfns.inv_softplus(0.05)], np.float32)
+        caches_full = stream(theta, w, y, 32, 1, 32)
+        caches_low = stream(theta, w, y, 32, 1, 16)
+        lattice = lattice_coords(32, 1)
+        m_full = float(model.mll(jnp.asarray(theta), caches_full, kind="rbf", lattice=lattice))
+        m_low = float(model.mll(jnp.asarray(theta), caches_low, kind="rbf", lattice=lattice))
+        assert float(caches_low["krank"]) < 16  # basis saturated well below r
+        assert abs(m_full - m_low) < 2.0, (m_full, m_low)
+
+    def test_krank_grows_then_saturates(self):
+        theta, x, y, w = make_problem(g=16, n=30, seed=5)
+        caches = stream(theta, w, y, 16, 1, 8)
+        assert float(caches["krank"]) == 8
+
+
+class TestHeteroscedastic:
+    def test_fixed_noise_scaling_equivalence(self):
+        # scaling (w, y) by 1/s with sigma^2 = 1 must equal a homoscedastic
+        # model with sigma^2 = s^2 when s is constant (A.5 reduction).
+        theta, x, y, w = make_problem(seed=6)
+        s_const = 0.3
+        # model A: homoscedastic with noise s^2
+        theta_a = theta.copy()
+        theta_a[-1] = covfns.inv_softplus(s_const ** 2 - 1e-6)
+        caches_a = stream(theta_a, w, y, 16, 1, 16)
+        lattice = lattice_coords(16, 1)
+        # model B: sigma^2 = 1, scaled caches
+        theta_b = theta.copy()
+        theta_b[-1] = covfns.inv_softplus(1.0 - 1e-6)
+        m = 16
+        caches_b = model.init_caches(m, 16)
+        svec = jnp.full(len(y), s_const)
+        caches_b = model.condition(caches_b, jnp.asarray(w), jnp.asarray(y),
+                                   svec, jnp.ones(len(y)))
+        xs = np.random.RandomState(7).uniform(-0.8, 0.8, (6, 1)).astype(np.float32)
+        ws = np.array(interp_weights_ref(xs, 16))
+        mean_a, var_a = model.predict(jnp.asarray(theta_a), caches_a,
+                                      jnp.asarray(ws), kind="rbf", lattice=lattice)
+        mean_b, var_b = model.predict(jnp.asarray(theta_b), caches_b,
+                                      jnp.asarray(ws), kind="rbf", lattice=lattice)
+        np.testing.assert_allclose(np.array(mean_a), np.array(mean_b), atol=2e-3)
+        np.testing.assert_allclose(np.array(var_a), np.array(var_b), atol=2e-3)
+
+
+class TestMasking:
+    def test_masked_rows_are_ignored(self):
+        theta, x, y, w = make_problem(seed=8)
+        m = 16
+        caches_a = model.init_caches(m, 16)
+        mask = jnp.asarray([1.0] * 12 + [0.0] * 12)
+        caches_a = model.condition(caches_a, jnp.asarray(w), jnp.asarray(y),
+                                   jnp.ones(24), mask)
+        caches_b = stream(theta, w[:12], y[:12], 16, 1, 16)
+        assert float(caches_a["n"]) == 12
+        np.testing.assert_allclose(np.array(caches_a["wty"]),
+                                   np.array(caches_b["wty"]), atol=1e-5)
+        np.testing.assert_allclose(np.array(caches_a["C"]),
+                                   np.array(caches_b["C"]), atol=1e-3)
+
+
+class TestSpectralMixture:
+    def test_sm_kernel_mll_finite_and_differentiable(self):
+        g, d, r, n = 32, 1, 16, 20
+        rng = np.random.RandomState(9)
+        kern = "sm2"
+        theta = np.zeros(covfns.theta_dim(kern, d), np.float32)
+        x = rng.uniform(-0.8, 0.8, (n, d)).astype(np.float32)
+        y = np.sin(6 * x[:, 0]).astype(np.float32)
+        w = np.array(interp_weights_ref(x, g))
+        caches = stream(theta, w, y, g, d, r)
+        lattice = lattice_coords(g, d)
+        val, grad = jax.value_and_grad(
+            lambda th: model.mll(th, caches, kind=kern, lattice=lattice))(jnp.asarray(theta))
+        assert np.isfinite(float(val))
+        assert np.all(np.isfinite(np.array(grad)))

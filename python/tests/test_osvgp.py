@@ -1,0 +1,81 @@
+"""O-SVGP baseline graph: objective sanity + gradient descent reduces loss."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import covfns, osvgp
+
+
+def setup(m=16, d=1, seed=0):
+    rng = np.random.RandomState(seed)
+    z = np.linspace(-1, 1, m).reshape(m, d).astype(np.float32)
+    theta = np.array([covfns.inv_softplus(0.4), covfns.inv_softplus(1.0),
+                      covfns.inv_softplus(0.1)], np.float32)
+    q_mu = np.zeros(m, np.float32)
+    q_raw = np.zeros((m, m), np.float32)
+    np.fill_diagonal(q_raw, covfns.inv_softplus(1.0))
+    old_mu = np.zeros(m, np.float32)
+    old_l = np.eye(m, dtype=np.float32)
+    return z, theta, q_mu, q_raw, old_mu, old_l
+
+
+def test_loss_finite_and_beta_scales_kl():
+    z, theta, q_mu, q_raw, old_mu, old_l = setup()
+    x = np.array([[0.3]], np.float32)
+    y = np.array([0.7], np.float32)
+    mask = np.ones(1, np.float32)
+    args = lambda beta: (jnp.asarray(q_mu), jnp.asarray(q_raw), jnp.asarray(theta),
+                         jnp.asarray(z), jnp.asarray(theta), jnp.asarray(old_mu),
+                         jnp.asarray(old_l), jnp.asarray(x), jnp.asarray(y),
+                         jnp.asarray(mask), beta, "rbf")
+    l_small = float(osvgp.loss(*args(1e-4)))
+    l_big = float(osvgp.loss(*args(1.0)))
+    assert np.isfinite(l_small) and np.isfinite(l_big)
+    # KL terms are positive once q differs from both anchors; with q = prior-ish
+    # they are small but the ordering must hold weakly
+    assert l_big >= l_small - 1e-3
+
+
+def test_gradient_descent_reduces_loss():
+    z, theta, q_mu, q_raw, old_mu, old_l = setup(seed=1)
+    rng = np.random.RandomState(2)
+    x = rng.uniform(-1, 1, (8, 1)).astype(np.float32)
+    y = np.sin(3 * x[:, 0]).astype(np.float32)
+    mask = np.ones(8, np.float32)
+    step = osvgp.make_step_fn(kind="rbf", m=16, d=1, q=8)
+    qm, qr, th = jnp.asarray(q_mu), jnp.asarray(q_raw), jnp.asarray(theta)
+    losses = []
+    for _ in range(40):
+        out = step(qm, qr, th, jnp.asarray(z), jnp.asarray(theta),
+                   jnp.asarray(old_mu), jnp.asarray(old_l),
+                   jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+                   jnp.asarray(1e-3))
+        loss, g_mu, g_raw, g_th = out
+        losses.append(float(loss))
+        qm = qm - 0.05 * g_mu
+        qr = qr - 0.05 * g_raw
+        th = th - 0.01 * g_th
+    assert losses[-1] < losses[0], losses[::10]
+
+
+def test_predict_interpolates_fitted_mean():
+    z, theta, q_mu, q_raw, old_mu, old_l = setup(m=24, seed=3)
+    # place posterior mean manually: q_mu = sin(3 z)
+    q_mu = np.sin(3 * z[:, 0]).astype(np.float32)
+    pred = osvgp.make_predict_fn(kind="rbf", m=24, d=1, b=16)
+    xs = np.linspace(-0.8, 0.8, 16).reshape(-1, 1).astype(np.float32)
+    mean, var, sig2 = pred(jnp.asarray(q_mu), jnp.asarray(q_raw), jnp.asarray(theta),
+                           jnp.asarray(z), jnp.asarray(xs))
+    err = np.abs(np.array(mean) - np.sin(3 * xs[:, 0])).max()
+    assert err < 0.25, err
+    assert float(sig2) > 0
+    assert np.all(np.array(var) > 0)
+
+
+def test_qfactor_softplus_diag():
+    qf = osvgp.make_qfactor_fn(m=8)
+    raw = np.zeros((8, 8), np.float32)
+    l = np.array(qf(jnp.asarray(raw))[0])
+    assert np.allclose(np.triu(l, 1), 0)
+    assert np.all(np.diag(l) > 0)

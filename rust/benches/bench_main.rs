@@ -1,0 +1,544 @@
+//! Benchmark harness regenerating every table and figure of the paper's
+//! evaluation (criterion is unavailable offline; `harness = false` with a
+//! hand-rolled runner).  Each section prints the same rows/series the paper
+//! reports; EXPERIMENTS.md records paper-shape vs measured-shape.
+//!
+//! Run all:        cargo bench
+//! Run one:        cargo bench -- fig2
+//! List sections:  cargo bench -- --list
+//!
+//! Absolute numbers differ from the paper (CPU PJRT vs V100 GPyTorch); the
+//! *shapes* — who wins, what stays constant-time, where curves flatline —
+//! are the reproduction targets (DESIGN.md §3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use wiski::bo::{run_bo, testfn_by_name};
+use wiski::data::{self, Projection};
+use wiski::gp::{
+    DirichletClassifier, ExactGp, LocalGps, OnlineGp, OSgpr, OSvgp, SolveMethod, Wiski,
+    WiskiConfig,
+};
+use wiski::kernels::Kernel;
+use wiski::metrics::{accuracy, gaussian_nll, rmse, RunningStats};
+use wiski::runtime::Runtime;
+
+type BenchFn = fn(&Arc<Runtime>);
+
+const SECTIONS: &[(&str, &str, BenchFn)] = &[
+    ("fig1", "FX time series, SM kernel: WISKI vs O-SVGP vs O-SGPR", fig1),
+    ("fig2", "powerplant stream: time/iter + RMSE vs exact GPs", fig2),
+    ("fig3", "UCI online regression: NLL + RMSE across 5 datasets", fig3),
+    ("fig4", "online classification: banana + svmguide", fig4),
+    ("fig5a", "Bayesian optimization on noisy Levy/Ackley", fig5a),
+    ("fig5b", "malaria active learning: qNIPV vs random", fig5b),
+    ("table1", "root-rank ablation at m=256 and m=1024", table1),
+    ("ablation_m", "Fig A.4: inducing-point count ablation", ablation_m),
+    ("ablation_beta", "Fig A.3: O-SVGP GVI beta ablation", ablation_beta),
+    ("ablation_steps", "Fig A.2: O-SVGP grad-steps ablation", ablation_steps),
+    ("perf", "microbenchmarks: per-op latencies across (m, r)", perf),
+];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--bench")).collect();
+    if args.iter().any(|a| a == "--list") {
+        for (name, desc, _) in SECTIONS {
+            println!("{name:>14}  {desc}");
+        }
+        return;
+    }
+    let rt = Arc::new(Runtime::new("artifacts").expect("run `make artifacts` first"));
+    let filter: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
+    let t0 = Instant::now();
+    for (name, desc, f) in SECTIONS {
+        if !filter.is_empty() && !filter.iter().any(|x| name.contains(x.as_str())) {
+            continue;
+        }
+        println!("\n=== {name}: {desc} ===");
+        let t = Instant::now();
+        f(&rt);
+        println!("--- {name} done in {:.1?} ---", t.elapsed());
+    }
+    println!("\nall selected benches done in {:.1?}", t0.elapsed());
+}
+
+// ---------------------------------------------------------------- helpers --
+
+fn wiski_default(rt: &Arc<Runtime>) -> Wiski {
+    Wiski::new(rt.clone(), WiskiConfig::default(), Projection::identity(2)).unwrap()
+}
+
+fn eval_model<M: OnlineGp>(model: &mut M, test_x: &[Vec<f64>], test_y: &[f64]) -> (f64, f64) {
+    let preds = model.predict(&test_x.to_vec()).unwrap();
+    let means: Vec<f64> = preds.iter().map(|p| p.mean).collect();
+    let vars: Vec<f64> = preds.iter().map(|p| p.var_y).collect();
+    (rmse(&means, test_y), gaussian_nll(&means, &vars, test_y))
+}
+
+/// Stream points one at a time, timing each observe; returns (rmse, nll,
+/// us-per-step at each checkpoint).
+fn stream_online<M: OnlineGp>(
+    model: &mut M,
+    stream_x: &[Vec<f64>],
+    stream_y: &[f64],
+    test_x: &[Vec<f64>],
+    test_y: &[f64],
+    checkpoints: &[usize],
+) -> Vec<(usize, f64, f64, f64)> {
+    let mut rows = vec![];
+    let mut window = RunningStats::default();
+    for (i, (x, y)) in stream_x.iter().zip(stream_y).enumerate() {
+        let t0 = Instant::now();
+        model.observe(x, *y).unwrap();
+        window.push(t0.elapsed().as_secs_f64() * 1e6);
+        if checkpoints.contains(&(i + 1)) {
+            let (r, n) = eval_model(model, test_x, test_y);
+            rows.push((i + 1, r, n, window.mean()));
+            window = RunningStats::default();
+        }
+    }
+    rows
+}
+
+// ------------------------------------------------------------------- fig1 --
+
+fn fig1(rt: &Arc<Runtime>) {
+    // N=40 series; batch-pretrain on first 10, stream the rest; snapshots at
+    // n = 20, 30, 40 for time-ordered and shuffled orders (paper Fig. 1).
+    let ds = data::fx_series(40, 0);
+    for order in ["time", "random"] {
+        let mut idx: Vec<usize> = (10..40).collect();
+        if order == "random" {
+            wiski::rng::Rng::new(7).shuffle(&mut idx);
+        }
+        println!("[order={order}]   n:    rmse(WISKI)  rmse(O-SVGP)  rmse(O-SGPR)");
+        let cfg = WiskiConfig { kind: "sm4".into(), g: 128, d: 1, r: 64, lr: 1e-2, grad_steps: 1, learn_noise: true };
+        let mut w = Wiski::new(rt.clone(), cfg, Projection::identity(1)).unwrap();
+        let mut v = OSvgp::new(rt.clone(), "sm4", 1, 32, 1e-3, 1e-2, Projection::identity(1), 0).unwrap();
+        let mut s = OSgpr::new(Kernel::SpectralMixture { q: 4 }, 16, 0);
+        // pretrain on the first 10 in batch + refit
+        let pre_x: Vec<Vec<f64>> = ds.x[..10].to_vec();
+        let pre_y = &ds.y[..10];
+        w.observe_batch(&pre_x, pre_y).unwrap();
+        w.refit(30).unwrap();
+        v.observe_batch(&pre_x, pre_y).unwrap();
+        s.observe_batch(&pre_x, pre_y).unwrap();
+        let mut seen = 10;
+        for (step, &i) in idx.iter().enumerate() {
+            w.observe(&ds.x[i], ds.y[i]).unwrap();
+            v.observe(&ds.x[i], ds.y[i]).unwrap();
+            s.observe(&ds.x[i], ds.y[i]).unwrap();
+            seen += 1;
+            if (step + 1) % 10 == 0 {
+                // evaluate on the full series (in-sample signal recovery)
+                let (rw, _) = eval_model(&mut w, &ds.x, &ds.y);
+                let (rv, _) = eval_model(&mut v, &ds.x, &ds.y);
+                let (rs, _) = eval_model(&mut s, &ds.x, &ds.y);
+                println!("           {seen:>4}   {rw:>10.4}  {rv:>11.4}  {rs:>11.4}");
+            }
+        }
+    }
+    println!("(paper: WISKI captures the signal; O-SVGP underfits, esp. time-ordered)");
+}
+
+// ------------------------------------------------------------------- fig2 --
+
+fn fig2(rt: &Arc<Runtime>) {
+    let spec = data::spec_by_name("powerplant").unwrap();
+    let mut ds = data::uci_like(spec, 0);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(0);
+    stream.truncate(1200);
+    let test_x = test.x[..256.min(test.x.len())].to_vec();
+    let test_y = &test.y[..test_x.len()];
+    let proj = Projection::random(spec.dim, 2, 17);
+    let checkpoints = [200, 400, 600, 800, 1000, 1200];
+
+    println!("model         n      rmse     nll    us/step");
+    // WISKI
+    let mut w = Wiski::new(rt.clone(), WiskiConfig::default(), proj.clone()).unwrap();
+    w.observe_batch(&pre.x, &pre.y).unwrap();
+    w.refit(50).unwrap();
+    for (n, r, nll, us) in stream_online(&mut w, &stream.x, &stream.y, &test_x, test_y, &checkpoints) {
+        println!("wiski      {n:>5} {r:>9.4} {nll:>7.3} {us:>10.0}");
+    }
+    // O-SVGP
+    let mut v = OSvgp::new(rt.clone(), "rbf", 2, 256, 1e-3, 1e-3, proj.clone(), 0).unwrap();
+    v.observe_batch(&pre.x, &pre.y).unwrap();
+    for (n, r, nll, us) in stream_online(&mut v, &stream.x, &stream.y, &test_x, test_y, &checkpoints) {
+        println!("osvgp      {n:>5} {r:>9.4} {nll:>7.3} {us:>10.0}");
+    }
+    // exact GPs on projected features (capped stream: cubic growth is the point)
+    let project = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> { xs.iter().map(|x| proj.apply(x)).collect() };
+    let px = project(&stream.x);
+    let ptx = project(&test_x);
+    for method in [SolveMethod::Cholesky, SolveMethod::Cg] {
+        let mut e = ExactGp::new(Kernel::Rbf { dim: 2 }, method, 0.05, 0);
+        e.observe_batch(&project(&pre.x), &pre.y).unwrap();
+        e.refit(20).unwrap();
+        let cap = 800; // growth trend is visible well before timeout
+        for (n, r, nll, us) in stream_online(
+            &mut e,
+            &px[..cap],
+            &stream.y[..cap],
+            &ptx,
+            test_y,
+            &[200, 400, 600, 800],
+        ) {
+            println!("{:<10} {n:>5} {r:>9.4} {nll:>7.3} {us:>10.0}", e.name());
+        }
+    }
+    println!("(paper Fig 2: WISKI+O-SVGP flat us/step; exact grows with n)");
+}
+
+// ------------------------------------------------------------------- fig3 --
+
+fn fig3(rt: &Arc<Runtime>) {
+    println!("dataset      model    final-rmse  final-nll   us/step");
+    for spec in &data::UCI_SPECS {
+        let mut ds = data::uci_like(spec, 1);
+        ds.standardize();
+        let (pre, mut stream, test) = ds.online_split(1);
+        // the m=1600 3droad grid costs ~2s/step on this CPU; the per-step
+        // cost is n-independent so a shorter stream shows the same row
+        stream.truncate(if spec.name == "3droad" { 120 } else { 800 });
+        let test_x = test.x[..200.min(test.x.len())].to_vec();
+        let test_y = &test.y[..test_x.len()];
+        let big = spec.n > 20_000;
+        let proj = if spec.dim <= 2 { Projection::identity(spec.dim) } else { Projection::random(spec.dim, 2, 17) };
+        let d_eff = proj.out_dim;
+
+        let mut report = |name: &str, r: f64, n: f64, us: f64| {
+            println!("{:<12} {name:<8} {r:>10.4} {n:>10.3} {us:>9.0}", spec.name);
+        };
+
+        // WISKI (3droad native 2-D uses the large g=40 grid like the paper)
+        let cfg = if spec.name == "3droad" {
+            WiskiConfig { g: 40, r: 256, ..WiskiConfig::default() }
+        } else {
+            WiskiConfig::default()
+        };
+        let mut w = Wiski::new(rt.clone(), cfg, proj.clone()).unwrap();
+        w.observe_batch(&pre.x, &pre.y).unwrap();
+        w.refit(50).unwrap();
+        let rows = stream_online(&mut w, &stream.x, &stream.y, &test_x, test_y, &[stream.len()]);
+        let (_, r, n, us) = rows[0];
+        report("wiski", r, n, us);
+
+        // O-SVGP
+        let mut v = OSvgp::new(rt.clone(), "rbf", 2, 256, 1e-3, 1e-3, proj.clone(), 1).unwrap();
+        v.observe_batch(&pre.x, &pre.y).unwrap();
+        let rows = stream_online(&mut v, &stream.x, &stream.y, &test_x, test_y, &[stream.len()]);
+        let (_, r, n, us) = rows[0];
+        report("osvgp", r, n, us);
+
+        if !big {
+            // exact GP and LGP only on the smaller sets (paper: "memory
+            // constraints or numerical issues" excluded them from the rest)
+            let project = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> { xs.iter().map(|x| proj.apply(x)).collect() };
+            let mut e = ExactGp::new(Kernel::Rbf { dim: d_eff }, SolveMethod::Cholesky, 0.05, 0);
+            e.observe_batch(&project(&pre.x), &pre.y).unwrap();
+            e.refit(20).unwrap();
+            let cap = stream.len().min(600);
+            let rows = stream_online(&mut e, &project(&stream.x)[..cap], &stream.y[..cap], &project(&test_x), test_y, &[cap]);
+            let (_, r, n, us) = rows[0];
+            report("exact", r, n, us);
+
+            let mut l = LocalGps::new(Kernel::Rbf { dim: d_eff }, 256);
+            let rows = stream_online(&mut l, &project(&stream.x), &stream.y, &project(&test_x), test_y, &[stream.len()]);
+            let (_, r, n, us) = rows[0];
+            report("lgp", r, n, us);
+
+            let mut s = OSgpr::new(Kernel::Rbf { dim: d_eff }, 64, 2);
+            let cap = stream.len().min(400);
+            let rows = stream_online(&mut s, &project(&stream.x)[..cap], &stream.y[..cap], &project(&test_x), test_y, &[cap]);
+            let (_, r, n, us) = rows[0];
+            report("osgpr", r, n, us);
+        }
+    }
+    println!("(paper Fig 3: WISKI ~ exact accuracy at scalable-method cost)");
+}
+
+// ------------------------------------------------------------------- fig4 --
+
+fn fig4(rt: &Arc<Runtime>) {
+    println!("dataset    n-seen   acc(WISKI-GPD)");
+    for (name, ds, proj) in [
+        ("banana", data::banana(400, 0), Projection::identity(2)),
+        ("svmguide", data::svmguide_like(1500, 0), Projection::random(4, 2, 11)),
+    ] {
+        let n_test = ds.len() / 10;
+        let make = || {
+            Wiski::new(rt.clone(), WiskiConfig { lr: 5e-3, ..WiskiConfig::default() }, proj.clone()).unwrap()
+        };
+        let mut clf = DirichletClassifier::new(vec![make(), make()]);
+        let test_x: Vec<Vec<f64>> = ds.x[..n_test].to_vec();
+        let test_y: Vec<usize> = ds.y[..n_test].iter().map(|v| *v as usize).collect();
+        let total = ds.len() - n_test;
+        for (i, (x, y)) in ds.x[n_test..].iter().zip(&ds.y[n_test..]).enumerate() {
+            clf.observe(x, *y as usize).unwrap();
+            if (i + 1) % (total / 4).max(1) == 0 || i + 1 == total {
+                let pred = clf.predict_class(&test_x).unwrap();
+                println!("{name:<10} {:>6}   {:>8.3}", i + 1, accuracy(&pred, &test_y));
+            }
+        }
+    }
+    println!("(paper Fig 4: GPD classifiers approach their hindsight accuracy)");
+}
+
+// ------------------------------------------------------------------ fig5a --
+
+fn fig5a(rt: &Arc<Runtime>) {
+    // reduced-iteration BO (full 1500-step runs live in examples/bayesopt.rs)
+    for fname in ["levy", "ackley"] {
+        let f = testfn_by_name(fname).unwrap();
+        let noise = if fname == "levy" { 10.0 } else { 4.0 };
+        println!("[{fname}] model   steps  best-objective  s/step");
+        let cfg = WiskiConfig { kind: "rbf".into(), g: 10, d: 3, r: 256, lr: 1e-2, grad_steps: 1, learn_noise: true };
+        let mut w = Wiski::new(rt.clone(), cfg, Projection::identity(3)).unwrap();
+        let tr = run_bo(&mut w, &f, 12, 3, 5, 1, noise, 0).unwrap();
+        println!(
+            "        wiski    {:>4}  {:>14.3} {:>7.3}",
+            tr.best_value.len(),
+            -tr.best_value.last().unwrap(),
+            tr.step_seconds.iter().sum::<f64>() / tr.step_seconds.len() as f64
+        );
+        let mut e = ExactGp::new(Kernel::Rbf { dim: 3 }, SolveMethod::Cholesky, 0.05, 0);
+        let tr = run_bo(&mut e, &f, 12, 3, 5, 1, noise, 0).unwrap();
+        println!(
+            "        exact    {:>4}  {:>14.3} {:>7.3}",
+            tr.best_value.len(),
+            -tr.best_value.last().unwrap(),
+            tr.step_seconds.iter().sum::<f64>() / tr.step_seconds.len() as f64
+        );
+    }
+    println!("(paper Fig 5a/A.6-8: WISKI ~ exact optimum, flat time/iter)");
+}
+
+// ------------------------------------------------------------------ fig5b --
+
+fn fig5b(rt: &Arc<Runtime>) {
+    use wiski::active::{integrated_variance, select_random};
+    let field = data::malaria_field(1500, 0);
+    let (train_x, train_y) = (&field.x[..1000], &field.y[..1000]);
+    let test_x = field.x[1000..].to_vec();
+    let test_y = &field.y[1000..];
+    let eval_x: Vec<Vec<f64>> = test_x.iter().take(200).cloned().collect();
+    let make = || {
+        Wiski::new(
+            rt.clone(),
+            WiskiConfig { kind: "matern12".into(), g: 30, d: 2, r: 256, lr: 1e-2, grad_steps: 1, learn_noise: true },
+            Projection::identity(2),
+        )
+        .unwrap()
+    };
+    println!("strategy   round   n    test-rmse   int-var");
+    for strategy in ["qnipv", "random"] {
+        let mut model = make();
+        for i in 0..10 {
+            model.observe(&train_x[(i * 97) % train_x.len()], train_y[(i * 97) % train_y.len()]).unwrap();
+        }
+        let mut used = vec![];
+        for round in 0..8usize {
+            let cand_idx: Vec<usize> = (0..train_x.len()).filter(|i| !used.contains(i)).take(16).collect();
+            let candidates: Vec<Vec<f64>> = cand_idx.iter().map(|&i| train_x[i].clone()).collect();
+            let chosen = if strategy == "qnipv" {
+                // single-pass qNIPV relaxation: score each candidate's solo
+                // fantasy once, take the top q (the full greedy version is
+                // select_nipv, exercised in examples/active_learning.rs —
+                // it costs O(q * candidates) fantasy evaluations per round)
+                let mut scored: Vec<(f64, usize)> = Vec::new();
+                for (ci, c) in candidates.iter().enumerate() {
+                    let mut f2 = model.clone();
+                    f2.set_grad_enabled(false);
+                    f2.observe_weighted(&[c.clone()], &[0.0], &[1.0]).unwrap();
+                    scored.push((integrated_variance(&f2.predict_full(&eval_x).unwrap()), ci));
+                }
+                scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                scored.iter().take(6).map(|&(_, ci)| ci).collect()
+            } else {
+                select_random(candidates.len(), 6, round as u64)
+            };
+            for &c in &chosen {
+                model.observe(&train_x[cand_idx[c]], train_y[cand_idx[c]]).unwrap();
+                used.push(cand_idx[c]);
+            }
+            model.refit(2).unwrap();
+            if (round + 1) % 4 == 0 {
+                let preds = model.predict(&test_x).unwrap();
+                let r = rmse(&preds.iter().map(|p| p.mean).collect::<Vec<_>>(), test_y);
+                let iv = integrated_variance(&preds);
+                println!("{strategy:<10} {:>4} {:>5}  {r:>9.4}  {iv:>8.4}", round + 1, model.num_observed());
+            }
+        }
+    }
+    println!("(paper Fig 5b: NIPV keeps improving; random/clumped selection stalls)");
+}
+
+// ------------------------------------------------------------------ table1 --
+
+fn table1(rt: &Arc<Runtime>) {
+    let spec = data::spec_by_name("skillcraft").unwrap();
+    let mut ds = data::uci_like(spec, 2);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(2);
+    stream.truncate(600);
+    let test_x = test.x[..200.min(test.x.len())].to_vec();
+    let test_y = &test.y[..test_x.len()];
+    let proj = Projection::random(spec.dim, 2, 17);
+    println!("   m      r    test-nll   test-rmse   krank");
+    for (g, rs) in [(16usize, vec![32usize, 64, 128, 192, 256]), (32, vec![256, 512])] {
+        let m = g * g;
+        for r in rs {
+            let cfg = WiskiConfig { g, r, ..WiskiConfig::default() };
+            let mut w = Wiski::new(rt.clone(), cfg, proj.clone()).unwrap();
+            w.observe_batch(&pre.x, &pre.y).unwrap();
+            w.refit(30).unwrap();
+            for (x, y) in stream.x.iter().zip(&stream.y) {
+                w.observe(x, *y).unwrap();
+            }
+            let (rm, nll) = eval_model(&mut w, &test_x, test_y);
+            println!("{m:>5} {r:>6} {nll:>10.3} {rm:>11.4} {:>7}", w.krank());
+        }
+    }
+    println!("(paper Table 1: small r fails; r >= ~m/2 matches full rank.");
+    println!(" note: the U C U^T factorization degrades gracefully at small r");
+    println!(" where the paper's L/J pseudo-inverse updates diverged to NLL ~1e6)");
+}
+
+// -------------------------------------------------------------- ablation_m --
+
+fn ablation_m(rt: &Arc<Runtime>) {
+    let spec = data::spec_by_name("powerplant").unwrap();
+    let mut ds = data::uci_like(spec, 3);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(3);
+    stream.truncate(500);
+    let test_x = test.x[..200.min(test.x.len())].to_vec();
+    let test_y = &test.y[..test_x.len()];
+    let proj = Projection::random(spec.dim, 2, 17);
+    println!("model    m     test-rmse   test-nll");
+    // r = m (or the largest available rank) so the sweep isolates the m
+    // effect; marginal ranks (r <= m/2) can diverge per Table 1 and would
+    // confound the ablation.
+    for (g, r) in [(8usize, 64usize), (16, 256), (32, 512)] {
+        let cfg = WiskiConfig { g, r, ..WiskiConfig::default() };
+        let mut w = Wiski::new(rt.clone(), cfg, proj.clone()).unwrap();
+        w.observe_batch(&pre.x, &pre.y).unwrap();
+        w.refit(30).unwrap();
+        for (x, y) in stream.x.iter().zip(&stream.y) {
+            w.observe(x, *y).unwrap();
+        }
+        let (rm, nll) = eval_model(&mut w, &test_x, test_y);
+        println!("wiski  {:>4} {rm:>11.4} {nll:>10.3}", g * g);
+    }
+    for m in [64usize, 256] {
+        let mut v = OSvgp::new(rt.clone(), "rbf", 2, m, 1e-3, 1e-3, proj.clone(), 3).unwrap();
+        v.observe_batch(&pre.x, &pre.y).unwrap();
+        for (x, y) in stream.x.iter().zip(&stream.y) {
+            v.observe(x, *y).unwrap();
+        }
+        let (rm, nll) = eval_model(&mut v, &test_x, test_y);
+        println!("osvgp  {m:>4} {rm:>11.4} {nll:>10.3}");
+    }
+    println!("(paper Fig A.4: WISKI monotone in m; O-SVGP non-monotone)");
+}
+
+// ----------------------------------------------------------- ablation_beta --
+
+fn ablation_beta(rt: &Arc<Runtime>) {
+    let spec = data::spec_by_name("powerplant").unwrap();
+    let mut ds = data::uci_like(spec, 4);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(4);
+    stream.truncate(400);
+    let test_x = test.x[..200.min(test.x.len())].to_vec();
+    let test_y = &test.y[..test_x.len()];
+    let proj = Projection::random(spec.dim, 2, 17);
+    println!("beta      test-rmse   test-nll");
+    for beta in [1e-4, 1e-3, 1e-2, 1e-1, 1.0] {
+        let mut v = OSvgp::new(rt.clone(), "rbf", 2, 256, beta, 1e-3, proj.clone(), 4).unwrap();
+        v.observe_batch(&pre.x, &pre.y).unwrap();
+        for (x, y) in stream.x.iter().zip(&stream.y) {
+            v.observe(x, *y).unwrap();
+        }
+        let (rm, nll) = eval_model(&mut v, &test_x, test_y);
+        println!("{beta:<8} {rm:>10.4} {nll:>10.3}");
+    }
+    println!("(paper Fig A.3: beta ~ 1e-3 works best with 1 grad step/point)");
+}
+
+// ---------------------------------------------------------- ablation_steps --
+
+fn ablation_steps(rt: &Arc<Runtime>) {
+    let spec = data::spec_by_name("powerplant").unwrap();
+    let mut ds = data::uci_like(spec, 5);
+    ds.standardize();
+    let (pre, mut stream, test) = ds.online_split(5);
+    stream.truncate(300);
+    let test_x = test.x[..200.min(test.x.len())].to_vec();
+    let test_y = &test.y[..test_x.len()];
+    let proj = Projection::random(spec.dim, 2, 17);
+    println!("grad-steps   test-rmse   test-nll   us/step");
+    for steps in [1usize, 2, 4, 8] {
+        let mut v = OSvgp::new(rt.clone(), "rbf", 2, 256, 1e-3, 1e-3, proj.clone(), 5).unwrap();
+        v.grad_steps = steps;
+        v.observe_batch(&pre.x, &pre.y).unwrap();
+        let rows = stream_online(&mut v, &stream.x, &stream.y, &test_x, test_y, &[stream.len()]);
+        let (_, r, n, us) = rows[0];
+        println!("{steps:>10} {r:>11.4} {n:>10.3} {us:>9.0}");
+    }
+    println!("(paper Fig A.2: with batch=1 streams, extra steps help little)");
+}
+
+// -------------------------------------------------------------------- perf --
+
+fn perf(rt: &Arc<Runtime>) {
+    use wiski::metrics::Timings;
+    println!("op                                mean        p50        p99");
+    // WISKI observe/predict across variants
+    for (g, r, label) in [(8usize, 64usize, "m=64  r=64 "), (16, 128, "m=256 r=128"), (32, 256, "m=1024 r=256")] {
+        let cfg = WiskiConfig { g, r, ..WiskiConfig::default() };
+        let mut w = Wiski::new(rt.clone(), cfg, Projection::identity(2)).unwrap();
+        let mut rng = wiski::rng::Rng::new(0);
+        // warmup + rank fill
+        for _ in 0..64 {
+            let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+            w.observe(&x, rng.normal()).unwrap();
+        }
+        let mut t_obs = Timings::default();
+        for _ in 0..100 {
+            let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+            let t0 = Instant::now();
+            w.observe(&x, rng.normal()).unwrap();
+            t_obs.push(t0.elapsed());
+        }
+        println!("wiski observe [{label}] {}", t_obs.summary());
+        let queries: Vec<Vec<f64>> = (0..256).map(|_| vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)]).collect();
+        let mut t_pred = Timings::default();
+        for _ in 0..20 {
+            let t0 = Instant::now();
+            w.predict(&queries).unwrap();
+            t_pred.push(t0.elapsed());
+        }
+        println!("wiski predict256 [{label}] {}", t_pred.summary());
+    }
+    // exact GP observe cost growth (the O(n^2) Fig. 2 curve)
+    let mut e = ExactGp::new(Kernel::Rbf { dim: 2 }, SolveMethod::Cholesky, 0.05, 0);
+    let mut rng = wiski::rng::Rng::new(1);
+    for target in [250usize, 500, 1000, 2000] {
+        while e.num_observed() < target - 50 {
+            let x = vec![rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)];
+            e.observe(&x, rng.normal()).unwrap();
+        }
+        let mut t = Timings::default();
+        for _ in 0..50 {
+            let x = vec![rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)];
+            let t0 = Instant::now();
+            e.observe(&x, rng.normal()).unwrap();
+            t.push(t0.elapsed());
+        }
+        println!("exact-chol observe @n={target:<5} {}", t.summary());
+    }
+}

@@ -1,0 +1,150 @@
+//! Active learning by negative integrated posterior variance (paper §5.4,
+//! Figs. 5b/5c; Seo et al. 2000).
+//!
+//! Each round selects the batch of q training candidates that most reduces
+//! the *average posterior variance over the test set* when fantasized into
+//! the model.  For WISKI, fantasizing is exact and cheap: conditioning only
+//! touches the (U, C) caches and the variance does not depend on y, so we
+//! fantasize with dummy targets, measure integrated variance, and keep the
+//! best batch (greedy over candidates, the standard qNIPV relaxation).
+//! For models without a fantasy channel (O-SVGP), the paper's own fallback
+//! is used: pick the candidates closest to the test points of maximal
+//! posterior variance — `select_by_max_variance`.
+
+use anyhow::Result;
+
+use crate::gp::{OnlineGp, Prediction};
+use crate::rng::Rng;
+
+/// Average posterior (latent) variance over a fixed evaluation set.
+pub fn integrated_variance(preds: &[Prediction]) -> f64 {
+    if preds.is_empty() {
+        return 0.0;
+    }
+    preds.iter().map(|p| p.var_f).sum::<f64>() / preds.len() as f64
+}
+
+/// Greedy qNIPV candidate selection via true fantasization.
+///
+/// `fantasize` must clone the model state, condition on the candidate batch
+/// (targets irrelevant), and return posterior variances on the eval set —
+/// WISKI supports this by cache cloning (see examples/active_learning.rs).
+/// Candidates are scored one at a time and accumulated greedily.
+pub fn select_nipv<F>(
+    candidates: &[Vec<f64>],
+    q: usize,
+    mut fantasize: F,
+) -> Result<Vec<usize>>
+where
+    F: FnMut(&[usize]) -> Result<f64>,
+{
+    let mut chosen: Vec<usize> = Vec::with_capacity(q);
+    for _ in 0..q.min(candidates.len()) {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..candidates.len() {
+            if chosen.contains(&i) {
+                continue;
+            }
+            let mut trial = chosen.clone();
+            trial.push(i);
+            let iv = fantasize(&trial)?;
+            if best.map_or(true, |(_, b)| iv < b) {
+                best = Some((i, iv));
+            }
+        }
+        chosen.push(best.expect("non-empty candidates").0);
+    }
+    Ok(chosen)
+}
+
+/// The paper's O-SVGP fallback: query test variance, take the q test points
+/// of maximal variance, and return the indices of the nearest candidates.
+pub fn select_by_max_variance<M: OnlineGp>(
+    model: &mut M,
+    candidates: &[Vec<f64>],
+    eval_set: &[Vec<f64>],
+    q: usize,
+) -> Result<Vec<usize>> {
+    let preds = model.predict(eval_set)?;
+    let mut by_var: Vec<(f64, usize)> =
+        preds.iter().enumerate().map(|(i, p)| (p.var_f, i)).collect();
+    by_var.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut chosen = Vec::with_capacity(q);
+    for &(_, ti) in by_var.iter().take(q) {
+        let target = &eval_set[ti];
+        let mut best = (f64::INFINITY, 0usize);
+        for (ci, c) in candidates.iter().enumerate() {
+            if chosen.contains(&ci) {
+                continue;
+            }
+            let d2: f64 = c.iter().zip(target).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d2 < best.0 {
+                best = (d2, ci);
+            }
+        }
+        chosen.push(best.1);
+    }
+    Ok(chosen)
+}
+
+/// Random selection baseline ("Random" curves in Fig. 5b).
+pub fn select_random(n_candidates: usize, q: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    rng.sample_indices(n_candidates, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{ExactGp, SolveMethod};
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn integrated_variance_averages() {
+        let preds = vec![
+            Prediction { mean: 0.0, var_f: 1.0, var_y: 1.1 },
+            Prediction { mean: 0.0, var_f: 3.0, var_y: 3.1 },
+        ];
+        assert_eq!(integrated_variance(&preds), 2.0);
+    }
+
+    #[test]
+    fn nipv_prefers_informative_candidate() {
+        // eval set near x=0.5; candidate at 0.5 reduces variance there more
+        // than a far-away candidate at -0.9.
+        let eval: Vec<Vec<f64>> = (0..10).map(|i| vec![0.4 + 0.02 * i as f64]).collect();
+        let candidates = vec![vec![-0.9], vec![0.5]];
+        let chosen = select_nipv(&candidates, 1, |idx| {
+            let mut gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+            for &i in idx {
+                gp.observe(&candidates[i], 0.0)?;
+            }
+            Ok(integrated_variance(&gp.predict(&eval)?))
+        })
+        .unwrap();
+        assert_eq!(chosen, vec![1]);
+    }
+
+    #[test]
+    fn max_variance_fallback_picks_near_uncertain_region() {
+        let mut gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        // observe only near x=-0.8 so variance is high near +0.8
+        for i in 0..10 {
+            let x = -0.9 + 0.02 * i as f64;
+            gp.observe(&[x], 0.0).unwrap();
+        }
+        let eval: Vec<Vec<f64>> = (0..21).map(|i| vec![-1.0 + 0.1 * i as f64]).collect();
+        let candidates = vec![vec![-0.8], vec![0.85]];
+        let chosen = select_by_max_variance(&mut gp, &candidates, &eval, 1).unwrap();
+        assert_eq!(chosen, vec![1]);
+    }
+
+    #[test]
+    fn random_selection_is_distinct() {
+        let s = select_random(20, 6, 3);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 6);
+    }
+}

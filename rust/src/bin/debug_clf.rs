@@ -1,0 +1,32 @@
+//! Dev scratch: diagnose the Dirichlet classifier.
+use std::sync::Arc;
+use wiski::data::{self, Projection};
+use wiski::gp::{DirichletClassifier, Wiski, WiskiConfig};
+use wiski::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let ds = data::banana(300, 0);
+    let make = || {
+        Wiski::new(rt.clone(), WiskiConfig { lr: 5e-3, ..WiskiConfig::default() },
+                   Projection::identity(2)).unwrap()
+    };
+    let mut clf = DirichletClassifier::new(vec![make(), make()]);
+    for i in 60..300 {
+        clf.observe(&ds.x[i], ds.y[i] as usize)?;
+    }
+    let test_x: Vec<Vec<f64>> = ds.x[..8].to_vec();
+    let marg = clf.predict_marginals(&test_x)?;
+    for i in 0..8 {
+        println!(
+            "x={:?} label={} m0={:+.3}+-{:.2} m1={:+.3}+-{:.2}",
+            &ds.x[i], ds.y[i], marg[0][i].mean, marg[0][i].var_f.sqrt(),
+            marg[1][i].mean, marg[1][i].var_f.sqrt()
+        );
+    }
+    for (c, m) in clf.models.iter().enumerate() {
+        let th: Vec<f64> = m.theta.iter().map(|v| wiski::kernels::softplus(*v)).collect();
+        println!("model{c}: theta={th:.3?} krank={} mll={:.1}", m.krank(), m.last_mll);
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Dev scratch: diagnose WISKI online fit quality.
+use std::sync::Arc;
+use wiski::data::Projection;
+use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
+use wiski::kernels::softplus;
+use wiski::rng::Rng;
+use wiski::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    for (label, grad, r, ls) in [
+        ("frozen r128", false, 128usize, 0.3),
+        ("frozen r256", false, 256, 0.3),
+        ("frozen r256 ls.5", false, 256, 0.5),
+        ("learned r256", true, 256, 0.3),
+        ("learned r256 lr1e-3", true, 256, 0.3),
+    ] {
+        let mut m = Wiski::new(
+            rt.clone(),
+            WiskiConfig { r, lr: if label.contains("lr1e-3") { 1e-3 } else { 5e-3 }, ..WiskiConfig::default() },
+            Projection::identity(2),
+        )?;
+        let d = 2;
+        for k in 0..d {
+            m.theta[k] = wiski::kernels::inv_softplus(ls);
+        }
+        m.set_grad_enabled(grad);
+        let mut rng = Rng::new(1);
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for _ in 0..300 {
+            let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+            let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+            m.observe(&x, y)?;
+            xs.push(x);
+            ys.push(y);
+        }
+        let mut tx = vec![];
+        let mut ty = vec![];
+        let mut rng2 = Rng::new(2);
+        for _ in 0..64 {
+            let x = vec![rng2.range(-0.9, 0.9), rng2.range(-0.9, 0.9)];
+            ty.push((2.5 * x[0]).sin() * (1.5 * x[1]).cos());
+            tx.push(x);
+        }
+        let p = m.predict(&tx)?;
+        let r = wiski::metrics::rmse(&p.iter().map(|q| q.mean).collect::<Vec<_>>(), &ty);
+        let th: Vec<f64> = m.theta.iter().map(|v| softplus(*v)).collect();
+        println!(
+            "{label}: rmse={r:.4} krank={} mll={:.2} theta(sp)={th:.3?}",
+            m.krank(),
+            m.last_mll
+        );
+    }
+    // O-SVGP diagnostics
+    for (lr, beta, steps) in [(0.01, 1e-3, 1usize), (0.05, 1e-3, 1), (0.05, 1e-2, 1), (0.05, 1e-3, 4)] {
+        let mut v = wiski::gp::OSvgp::new(
+            rt.clone(), "rbf", 2, 64, beta, lr, Projection::identity(2), 0)?;
+        v.grad_steps = steps;
+        let mut rng = Rng::new(1);
+        for _ in 0..300 {
+            let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+            let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+            v.observe(&x, y)?;
+        }
+        let mut tx = vec![];
+        let mut ty = vec![];
+        let mut rng2 = Rng::new(2);
+        for _ in 0..64 {
+            let x = vec![rng2.range(-0.9, 0.9), rng2.range(-0.9, 0.9)];
+            ty.push((2.5 * x[0]).sin() * (1.5 * x[1]).cos());
+            tx.push(x);
+        }
+        let p = v.predict(&tx)?;
+        let r = wiski::metrics::rmse(&p.iter().map(|q| q.mean).collect::<Vec<_>>(), &ty);
+        let th: Vec<f64> = v.theta.iter().map(|t| softplus(*t)).collect();
+        println!("osvgp lr={lr} beta={beta} steps={steps}: rmse={r:.4} loss={:.3} theta={th:.3?}", v.last_loss);
+    }
+    Ok(())
+}
+// (appended) classification debug entry: run with `debug_fit clf`

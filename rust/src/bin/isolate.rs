@@ -1,0 +1,46 @@
+//! Dev tool: run a standalone HLO artifact with raw f32 inputs and dump the
+//! outputs, for diffing against python references (npy files are read as raw
+//! f32 after the 128-byte header).
+use anyhow::Result;
+
+fn read_npy_f32(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    // npy v1 header: 10-byte magic+version+len, then header text padded.
+    let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let data = &bytes[10 + hlen..];
+    Ok(data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let hlo = &args[1];
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(hlo).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+
+    // remaining args: path:shape like /tmp/x.npy:8,2
+    let mut lits = Vec::new();
+    for a in &args[2..] {
+        let (path, shape) = a.split_once(':').unwrap();
+        let dims: Vec<i64> = shape.split(',').map(|d| d.parse().unwrap()).collect();
+        let data = read_npy_f32(path)?;
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        lits.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let mut out = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    for (i, part) in out.decompose_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))?.iter().enumerate() {
+        let v = part.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let path = format!("/tmp/isolate_out{i}.f32");
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&path, bytes)?;
+        println!("out{i}: len={} first8={:?} -> {path}", v.len(), &v[..v.len().min(8)]);
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bridge smoke test: load the smallest wiski_step artifact, run one online
+//! update from Rust, and print the outputs (cross-checked against python in
+//! python/tests/test_bridge_vectors.py via artifacts/smoke_vector.txt).
+use anyhow::Result;
+use wiski::runtime::{Runtime, Tensor};
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::new(&dir)?;
+    println!("manifest: {} artifacts", rt.manifest().len());
+
+    let name = "wiski_step_rbf_d2_g8_r64_q1";
+    let spec = rt.spec(name)?.clone();
+    let (m, r) = (spec.meta_usize("m")?, spec.meta_usize("r")?);
+    println!("compiling {name} (m={m}, r={r})...");
+
+    let theta = Tensor::vec1(vec![0.5, 0.5, 0.54, -2.0]);
+    let mut ins = vec![theta];
+    ins.push(Tensor::zeros(&[m])); // wty
+    ins.push(Tensor::scalar(0.0)); // yty
+    ins.push(Tensor::scalar(0.0)); // n
+    ins.push(Tensor::zeros(&[m, r])); // U
+    ins.push(Tensor::zeros(&[r, r])); // C
+    ins.push(Tensor::scalar(0.0)); // krank
+    ins.push(Tensor::new(vec![1, 2], vec![0.3, -0.2])); // x
+    ins.push(Tensor::vec1(vec![0.7])); // y
+    ins.push(Tensor::vec1(vec![1.0])); // s
+    ins.push(Tensor::vec1(vec![1.0])); // mask
+
+    let t0 = std::time::Instant::now();
+    let out = rt.exec(name, &ins)?;
+    println!("first exec (incl. compile): {:?}", t0.elapsed());
+    let t1 = std::time::Instant::now();
+    let out2 = rt.exec(name, &ins)?;
+    println!("second exec: {:?}", t1.elapsed());
+    assert_eq!(out.len(), out2.len());
+
+    let mll = out[6].item();
+    let grad = &out[7].data;
+    let n_out = out[2].item();
+    let krank = out[5].item();
+    println!("n={n_out} krank={krank} mll={mll} grad={grad:?}");
+    assert_eq!(n_out, 1.0);
+    assert_eq!(krank, 1.0);
+    assert!(mll.is_finite());
+
+    // predict path
+    let pname = "wiski_predict_rbf_d2_g8_r64_b256";
+    let pspec = rt.spec(pname)?.clone();
+    let b = pspec.meta_usize("b")?;
+    let mut pins = vec![ins[0].clone()];
+    for t in &out[0..6] {
+        pins.push(t.clone());
+    }
+    let mut xs = vec![0f32; b * 2];
+    for i in 0..b {
+        xs[2 * i] = -1.0 + 2.0 * (i as f32) / (b as f32);
+        xs[2 * i + 1] = 0.0;
+    }
+    pins.push(Tensor::new(vec![b, 2], xs));
+    let t2 = std::time::Instant::now();
+    let pout = rt.exec(pname, &pins)?;
+    println!("predict exec (incl. compile): {:?}", t2.elapsed());
+    let mean = &pout[0].data;
+    let var = &pout[1].data;
+    println!("mean[0..4]={:?} var[0..4]={:?} sig2={}", &mean[0..4], &var[0..4], pout[2].item());
+    assert!(mean.iter().all(|v| v.is_finite()));
+    assert!(var.iter().all(|v| *v >= 0.0));
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Bayesian optimization (paper §5.3, Figs. 5a / A.6–A.8).
+//!
+//! Loop: fit surrogate -> optimize acquisition (qUCB or EI) -> query the
+//! noisy objective with a batch of q points -> condition the model online.
+//! BoTorch's LBFGS-B acquisition optimizer is replaced by multi-start
+//! random search + coordinate refinement (DESIGN.md §4).
+
+mod acquisition;
+mod testfns;
+
+pub use acquisition::{maximize_acquisition, AcqKind, AcqOptions};
+pub use testfns::{testfn_by_name, TestFn, TESTFN_NAMES};
+
+use anyhow::Result;
+
+use crate::gp::OnlineGp;
+use crate::rng::Rng;
+
+/// One Bayesian-optimization run's trace.
+#[derive(Clone, Debug, Default)]
+pub struct BoTrace {
+    /// Best (maximal) observed objective value after each step.
+    pub best_value: Vec<f64>,
+    /// Wall-clock seconds per step (refit + acquisition + observe).
+    pub step_seconds: Vec<f64>,
+}
+
+/// Run BO on `f` (maximization of the *negated* test function, matching the
+/// paper's setup of minimizing noisy 3-D benchmarks).
+#[allow(clippy::too_many_arguments)]
+pub fn run_bo<M: OnlineGp>(
+    model: &mut M,
+    f: &TestFn,
+    steps: usize,
+    q: usize,
+    init: usize,
+    refit_steps: usize,
+    noise_sd: f64,
+    seed: u64,
+) -> Result<BoTrace> {
+    let mut rng = Rng::new(seed ^ 0xB0);
+    let d = f.dim;
+    let mut best = f64::NEG_INFINITY;
+    let mut trace = BoTrace::default();
+
+    // random initial design
+    for _ in 0..init {
+        let x: Vec<f64> = (0..d).map(|_| rng.range(-1.0, 1.0)).collect();
+        let y_true = -(f.eval)(&x);
+        let y = y_true + noise_sd * rng.normal();
+        best = best.max(y_true);
+        model.observe(&x, y)?;
+    }
+
+    for _ in 0..steps {
+        let t0 = std::time::Instant::now();
+        model.refit(refit_steps)?;
+        let cand = maximize_acquisition(
+            model,
+            d,
+            q,
+            AcqOptions { kind: AcqKind::Ucb { beta: 2.0 }, restarts: 8, refine_iters: 20 },
+            rng.next_u64(),
+        )?;
+        for x in cand {
+            let y_true = -(f.eval)(&x);
+            let y = y_true + noise_sd * rng.normal();
+            best = best.max(y_true);
+            model.observe(&x, y)?;
+        }
+        trace.best_value.push(best);
+        trace.step_seconds.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(trace)
+}

@@ -1,0 +1,130 @@
+//! The paper's noisy 3-D BO benchmarks (BoTorch test functions), defined on
+//! [-1, 1]^3 via affine rescaling of each function's canonical domain.
+//! All are *minimization* problems; `run_bo` negates them.
+
+/// A named objective on [-1,1]^dim.
+pub struct TestFn {
+    pub name: &'static str,
+    pub dim: usize,
+    /// Minimum value (for regret reporting where known).
+    pub f_min: f64,
+    pub eval: fn(&[f64]) -> f64,
+}
+
+pub const TESTFN_NAMES: [&str; 6] =
+    ["levy", "ackley", "styblinskitang", "rastrigin", "griewank", "michalewicz"];
+
+fn scale(x: f64, lo: f64, hi: f64) -> f64 {
+    lo + (x + 1.0) * 0.5 * (hi - lo)
+}
+
+fn levy(x: &[f64]) -> f64 {
+    // canonical domain [-10, 10]^d
+    let w: Vec<f64> = x.iter().map(|&v| 1.0 + (scale(v, -10.0, 10.0) - 1.0) / 4.0).collect();
+    let d = w.len();
+    let mut s = (std::f64::consts::PI * w[0]).sin().powi(2);
+    for i in 0..d - 1 {
+        s += (w[i] - 1.0).powi(2)
+            * (1.0 + 10.0 * (std::f64::consts::PI * w[i] + 1.0).sin().powi(2));
+    }
+    s + (w[d - 1] - 1.0).powi(2) * (1.0 + (2.0 * std::f64::consts::PI * w[d - 1]).sin().powi(2))
+}
+
+fn ackley(x: &[f64]) -> f64 {
+    // canonical domain [-32.768, 32.768]^d; use [-5,5] like BoTorch's default bounds for BO
+    let z: Vec<f64> = x.iter().map(|&v| scale(v, -5.0, 5.0)).collect();
+    let d = z.len() as f64;
+    let s1: f64 = z.iter().map(|v| v * v).sum::<f64>() / d;
+    let s2: f64 = z.iter().map(|v| (2.0 * std::f64::consts::PI * v).cos()).sum::<f64>() / d;
+    -20.0 * (-0.2 * s1.sqrt()).exp() - s2.exp() + 20.0 + std::f64::consts::E
+}
+
+fn styblinski_tang(x: &[f64]) -> f64 {
+    let z: Vec<f64> = x.iter().map(|&v| scale(v, -5.0, 5.0)).collect();
+    0.5 * z.iter().map(|v| v.powi(4) - 16.0 * v * v + 5.0 * v).sum::<f64>()
+}
+
+fn rastrigin(x: &[f64]) -> f64 {
+    let z: Vec<f64> = x.iter().map(|&v| scale(v, -5.12, 5.12)).collect();
+    10.0 * z.len() as f64
+        + z.iter()
+            .map(|v| v * v - 10.0 * (2.0 * std::f64::consts::PI * v).cos())
+            .sum::<f64>()
+}
+
+fn griewank(x: &[f64]) -> f64 {
+    let z: Vec<f64> = x.iter().map(|&v| scale(v, -600.0, 600.0)).collect();
+    let s: f64 = z.iter().map(|v| v * v).sum::<f64>() / 4000.0;
+    let p: f64 = z
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos())
+        .product();
+    s - p + 1.0
+}
+
+fn michalewicz(x: &[f64]) -> f64 {
+    let z: Vec<f64> = x.iter().map(|&v| scale(v, 0.0, std::f64::consts::PI)).collect();
+    let m = 10.0;
+    -z.iter()
+        .enumerate()
+        .map(|(i, v)| v.sin() * ((i + 1) as f64 * v * v / std::f64::consts::PI).sin().powi(2 * m as i32))
+        .sum::<f64>()
+}
+
+pub fn testfn_by_name(name: &str) -> Option<TestFn> {
+    let (f, f_min): (fn(&[f64]) -> f64, f64) = match name {
+        "levy" => (levy, 0.0),
+        "ackley" => (ackley, 0.0),
+        "styblinskitang" => (styblinski_tang, -39.166 * 3.0),
+        "rastrigin" => (rastrigin, 0.0),
+        "griewank" => (griewank, 0.0),
+        "michalewicz" => (michalewicz, -1.8013 /* 3-D approx -2.76 */),
+        _ => return None,
+    };
+    Some(TestFn { name: TESTFN_NAMES.iter().find(|n| **n == name)?, dim: 3, f_min, eval: f })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for n in TESTFN_NAMES {
+            let f = testfn_by_name(n).unwrap();
+            let v = (f.eval)(&[0.1, -0.2, 0.5]);
+            assert!(v.is_finite(), "{n}");
+        }
+    }
+
+    #[test]
+    fn levy_minimum_at_canonical_point() {
+        // global min at w = 1 i.e. z = 1 -> x = scale^{-1}(1) = (1-(-10))/20*2-1
+        let f = testfn_by_name("levy").unwrap();
+        let x_star = [(1.0 + 10.0) / 20.0 * 2.0 - 1.0; 3];
+        let at_min = (f.eval)(&x_star);
+        assert!(at_min < 1e-9, "{at_min}");
+        assert!((f.eval)(&[0.5, 0.5, 0.5]) > at_min);
+    }
+
+    #[test]
+    fn ackley_min_at_origin() {
+        let f = testfn_by_name("ackley").unwrap();
+        let at0 = (f.eval)(&[0.0, 0.0, 0.0]);
+        assert!(at0.abs() < 1e-9);
+        assert!((f.eval)(&[0.3, 0.3, 0.3]) > 1.0);
+    }
+
+    #[test]
+    fn rastrigin_min_at_origin() {
+        let f = testfn_by_name("rastrigin").unwrap();
+        assert!((f.eval)(&[0.0; 3]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn griewank_min_at_origin() {
+        let f = testfn_by_name("griewank").unwrap();
+        assert!((f.eval)(&[0.0; 3]).abs() < 1e-9);
+    }
+}

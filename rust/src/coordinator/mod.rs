@@ -1,0 +1,18 @@
+//! L3 coordinator: the streaming online-GP service.
+//!
+//! The paper's system is an online learner embedded in decision loops
+//! (regression streams, Bayesian optimization, active sampling).  This
+//! module packages the models behind a threaded request router with
+//! micro-batching:
+//!
+//!   clients --mpsc--> [router thread: drain queue, coalesce Observe
+//!                      requests up to the artifact batch q, interleave
+//!                      Predict] --owns--> OnlineGp model + PJRT runtime
+//!
+//! tokio is not in the offline vendor set, so the event loop is
+//! std::thread + std::sync::mpsc (one worker per model; the PJRT CPU
+//! client itself parallelizes the heavy kernels internally).
+
+mod server;
+
+pub use server::{ModelHandle, ModelServer, Request, Response, ServerStats};

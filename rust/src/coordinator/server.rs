@@ -1,0 +1,287 @@
+//! Threaded model server: request router + observation micro-batcher.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gp::{OnlineGp, Prediction};
+
+/// Client -> server messages.
+pub enum Request {
+    /// Fold an observation into the posterior.
+    Observe { x: Vec<f64>, y: f64 },
+    /// Posterior marginals for a batch of query points.
+    Predict { xs: Vec<Vec<f64>>, reply: Sender<Response> },
+    /// Extra optimization passes (BO-style refits).
+    Refit { steps: usize, reply: Sender<Response> },
+    /// Drain pending observations and report stats.
+    Flush { reply: Sender<Response> },
+    Shutdown,
+}
+
+/// Server -> client messages.
+#[derive(Debug)]
+pub enum Response {
+    Predictions(Vec<Prediction>),
+    Stats(ServerStats),
+    Done,
+    Error(String),
+}
+
+/// Counters exposed by the router.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub observed: u64,
+    pub observe_batches: u64,
+    pub predicts: u64,
+    pub refits: u64,
+    pub observe_time_us: f64,
+    pub predict_time_us: f64,
+}
+
+impl ServerStats {
+    pub fn mean_observe_us(&self) -> f64 {
+        if self.observe_batches == 0 {
+            0.0
+        } else {
+            self.observe_time_us / self.observe_batches as f64
+        }
+    }
+}
+
+/// Handle for talking to a running model server.
+#[derive(Clone)]
+pub struct ModelHandle {
+    tx: Sender<Request>,
+    stats: Arc<Mutex<ServerStats>>,
+}
+
+impl ModelHandle {
+    pub fn observe(&self, x: Vec<f64>, y: f64) -> Result<()> {
+        self.tx
+            .send(Request::Observe { x, y })
+            .map_err(|_| anyhow::anyhow!("model server is down"))
+    }
+
+    pub fn predict(&self, xs: Vec<Vec<f64>>) -> Result<Vec<Prediction>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Predict { xs, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("model server is down"))?;
+        match rrx.recv()? {
+            Response::Predictions(p) => Ok(p),
+            Response::Error(e) => Err(anyhow::anyhow!(e)),
+            other => Err(anyhow::anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn refit(&self, steps: usize) -> Result<()> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Refit { steps, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("model server is down"))?;
+        match rrx.recv()? {
+            Response::Done => Ok(()),
+            Response::Error(e) => Err(anyhow::anyhow!(e)),
+            other => Err(anyhow::anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Block until all queued observations are applied.
+    pub fn flush(&self) -> Result<ServerStats> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Flush { reply: rtx })
+            .map_err(|_| anyhow::anyhow!("model server is down"))?;
+        match rrx.recv()? {
+            Response::Stats(s) => Ok(s),
+            Response::Error(e) => Err(anyhow::anyhow!(e)),
+            other => Err(anyhow::anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// A running server owning one model on a worker thread.
+pub struct ModelServer {
+    handle: ModelHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Spawn the router thread.  `batch_q` is the micro-batch ceiling:
+    /// consecutive queued Observe requests are coalesced into one
+    /// `observe_batch` call (one artifact execution for WISKI).
+    pub fn spawn<M: OnlineGp + Send + 'static>(mut model: M, batch_q: usize) -> Self {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats_worker = stats.clone();
+        let join = std::thread::spawn(move || {
+            let mut pending_x: Vec<Vec<f64>> = Vec::new();
+            let mut pending_y: Vec<f64> = Vec::new();
+            let flush_pending = |model: &mut M,
+                                 pending_x: &mut Vec<Vec<f64>>,
+                                 pending_y: &mut Vec<f64>|
+             -> Result<()> {
+                if pending_x.is_empty() {
+                    return Ok(());
+                }
+                let t0 = Instant::now();
+                model.observe_batch(pending_x, pending_y)?;
+                let dt = t0.elapsed().as_secs_f64() * 1e6;
+                let mut st = stats_worker.lock().unwrap();
+                st.observed += pending_x.len() as u64;
+                st.observe_batches += 1;
+                st.observe_time_us += dt;
+                pending_x.clear();
+                pending_y.clear();
+                Ok(())
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Observe { x, y } => {
+                        pending_x.push(x);
+                        pending_y.push(y);
+                        // coalesce: drain whatever else is already queued
+                        while pending_x.len() < batch_q {
+                            match rx.try_recv() {
+                                Ok(Request::Observe { x, y }) => {
+                                    pending_x.push(x);
+                                    pending_y.push(y);
+                                }
+                                Ok(other) => {
+                                    // non-observe: flush, then handle it
+                                    if let Err(e) =
+                                        flush_pending(&mut model, &mut pending_x, &mut pending_y)
+                                    {
+                                        eprintln!("observe error: {e:#}");
+                                    }
+                                    if !Self::handle_other(
+                                        &mut model,
+                                        other,
+                                        &stats_worker,
+                                    ) {
+                                        return;
+                                    }
+                                    break;
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                        if let Err(e) = flush_pending(&mut model, &mut pending_x, &mut pending_y) {
+                            eprintln!("observe error: {e:#}");
+                        }
+                    }
+                    other => {
+                        if let Err(e) = flush_pending(&mut model, &mut pending_x, &mut pending_y) {
+                            eprintln!("observe error: {e:#}");
+                        }
+                        if !Self::handle_other(&mut model, other, &stats_worker) {
+                            return;
+                        }
+                    }
+                }
+            }
+        });
+        ModelServer { handle: ModelHandle { tx, stats }, join: Some(join) }
+    }
+
+    /// Returns false on Shutdown.
+    fn handle_other<M: OnlineGp>(
+        model: &mut M,
+        req: Request,
+        stats: &Arc<Mutex<ServerStats>>,
+    ) -> bool {
+        match req {
+            Request::Predict { xs, reply } => {
+                let t0 = Instant::now();
+                let resp = match model.predict(&xs) {
+                    Ok(p) => Response::Predictions(p),
+                    Err(e) => Response::Error(format!("{e:#}")),
+                };
+                let mut st = stats.lock().unwrap();
+                st.predicts += 1;
+                st.predict_time_us += t0.elapsed().as_secs_f64() * 1e6;
+                let _ = reply.send(resp);
+                true
+            }
+            Request::Refit { steps, reply } => {
+                let resp = match model.refit(steps) {
+                    Ok(()) => Response::Done,
+                    Err(e) => Response::Error(format!("{e:#}")),
+                };
+                stats.lock().unwrap().refits += 1;
+                let _ = reply.send(resp);
+                true
+            }
+            Request::Flush { reply } => {
+                let _ = reply.send(Response::Stats(stats.lock().unwrap().clone()));
+                true
+            }
+            Request::Observe { .. } => unreachable!("handled by router"),
+            Request::Shutdown => false,
+        }
+    }
+
+    pub fn handle(&self) -> ModelHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{ExactGp, SolveMethod};
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn server_round_trip_with_exact_gp() {
+        let gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let server = ModelServer::spawn(gp, 4);
+        let h = server.handle();
+        for i in 0..20 {
+            let x = -1.0 + 0.1 * i as f64;
+            h.observe(vec![x], (3.0f64 * x).sin()).unwrap();
+        }
+        let stats = h.flush().unwrap();
+        assert_eq!(stats.observed, 20);
+        // micro-batching should have coalesced at least some requests
+        assert!(stats.observe_batches <= 20);
+        let preds = h.predict(vec![vec![0.0], vec![0.5]]).unwrap();
+        assert_eq!(preds.len(), 2);
+        assert!(preds[0].mean.is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn predict_before_any_observation_is_prior() {
+        let gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let server = ModelServer::spawn(gp, 4);
+        let h = server.handle();
+        let p = h.predict(vec![vec![0.2]]).unwrap();
+        assert_eq!(p[0].mean, 0.0);
+        assert!(p[0].var_f > 0.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Synthetic dataset generators + streaming utilities.
+//!
+//! The paper's experiments use UCI tables, a 2007 GBP/USD series, LIBSVM
+//! classification sets, and the Malaria Atlas raster — none of which are
+//! available offline.  Per DESIGN.md §4 each is replaced by a seeded
+//! generator matched in size, dimensionality, and signal character: the
+//! experiments measure *online-learning dynamics* (fit-over-stream, time
+//! per iteration, query spreading), which these preserve.
+
+mod projection;
+mod synthetic;
+
+pub use projection::Projection;
+pub use synthetic::{
+    banana, fx_series, malaria_field, spec_by_name, svmguide_like, uci_like,
+    SyntheticSpec, UCI_SPECS,
+};
+
+use crate::rng::Rng;
+
+/// A regression/classification dataset with inputs scaled to [-1, 1]^d and
+/// standardized targets (the paper's preprocessing, §5.1).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Scale inputs to [-1,1]^d and standardize targets in place.
+    pub fn standardize(&mut self) {
+        let d = self.dim;
+        for k in 0..d {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for row in &self.x {
+                lo = lo.min(row[k]);
+                hi = hi.max(row[k]);
+            }
+            let span = (hi - lo).max(1e-12);
+            for row in &mut self.x {
+                row[k] = 2.0 * (row[k] - lo) / span - 1.0;
+            }
+        }
+        let n = self.y.len().max(1) as f64;
+        let mean = self.y.iter().sum::<f64>() / n;
+        let var = self.y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let std = var.sqrt().max(1e-12);
+        for v in &mut self.y {
+            *v = (*v - mean) / std;
+        }
+    }
+
+    /// Paper §5.1 protocol: shuffle, split 90/10 train/test, then carve 5%
+    /// of train as the pretraining batch.  Returns (pretrain, stream, test).
+    pub fn online_split(&self, seed: u64) -> (Split, Split, Split) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let n_test = (n as f64 * 0.1).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        let n_pre = ((train_idx.len() as f64) * 0.05).round().max(1.0) as usize;
+        let (pre_idx, stream_idx) = train_idx.split_at(n_pre);
+        (
+            self.subset(pre_idx),
+            self.subset(stream_idx),
+            self.subset(test_idx),
+        )
+    }
+
+    pub fn subset(&self, idx: &[usize]) -> Split {
+        Split {
+            x: idx.iter().map(|&i| self.x[i].clone()).collect(),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+}
+
+/// A materialized subset (pretrain / stream / test).
+#[derive(Clone, Debug, Default)]
+pub struct Split {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Truncate to at most n points (benches cap stream lengths).
+    pub fn truncate(&mut self, n: usize) {
+        self.x.truncate(n);
+        self.y.truncate(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_bounds_and_moments() {
+        let mut ds = uci_like(&UCI_SPECS[1], 0); // powerplant-like
+        ds.standardize();
+        for row in &ds.x {
+            for &v in row {
+                assert!((-1.0..=1.0).contains(&v));
+            }
+        }
+        let n = ds.y.len() as f64;
+        let mean = ds.y.iter().sum::<f64>() / n;
+        assert!(mean.abs() < 1e-9);
+    }
+
+    #[test]
+    fn online_split_partitions() {
+        let mut ds = uci_like(&UCI_SPECS[0], 1);
+        ds.standardize();
+        let (pre, stream, test) = ds.online_split(7);
+        assert_eq!(pre.len() + stream.len() + test.len(), ds.len());
+        assert!(pre.len() > 0 && test.len() > 0);
+        assert!(pre.len() < stream.len());
+    }
+}

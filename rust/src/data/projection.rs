@@ -1,0 +1,96 @@
+//! Fixed random input projections for d > 3 datasets.
+//!
+//! SKI's grid is exponential in dimension, so the paper projects inputs to
+//! R^2 before interpolation (§4.3).  The paper trains the projection by MLL
+//! gradients; it also notes "the projection may be random (Delbridge et
+//! al., 2020) or learned".  We use the random variant (seeded Gaussian
+//! directions + tanh squash to [-1,1]^2) so the projection is a pure
+//! function the Rust hot path can apply without a gradient channel;
+//! DESIGN.md §4 records the substitution.
+
+use crate::rng::Rng;
+
+/// Linear map R^d -> R^k followed by tanh, landing in (-1, 1)^k.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// k rows of length d.
+    w: Vec<Vec<f64>>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Projection {
+    /// Identity (no-op) projection for d <= grid dimension.
+    pub fn identity(d: usize) -> Self {
+        let mut w = vec![vec![0.0; d]; d];
+        for (i, row) in w.iter_mut().enumerate() {
+            row[i] = 1.0;
+        }
+        Self { w, in_dim: d, out_dim: d }
+    }
+
+    /// Seeded Gaussian random projection, scaled by 1/sqrt(d) so tanh stays
+    /// in its informative range for inputs in [-1,1]^d.
+    pub fn random(in_dim: usize, out_dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9407);
+        let scale = 1.6 / (in_dim as f64).sqrt();
+        let w = (0..out_dim)
+            .map(|_| (0..in_dim).map(|_| rng.normal() * scale).collect())
+            .collect();
+        Self { w, in_dim, out_dim }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.in_dim == self.out_dim
+            && self
+                .w
+                .iter()
+                .enumerate()
+                .all(|(i, row)| row.iter().enumerate().all(|(j, &v)| v == if i == j { 1.0 } else { 0.0 }))
+    }
+
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.in_dim);
+        if self.is_identity() {
+            return x.to_vec();
+        }
+        self.w
+            .iter()
+            .map(|row| {
+                let t: f64 = row.iter().zip(x).map(|(a, b)| a * b).sum();
+                t.tanh()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_passthrough() {
+        let p = Projection::identity(3);
+        assert!(p.is_identity());
+        assert_eq!(p.apply(&[0.1, -0.5, 0.9]), vec![0.1, -0.5, 0.9]);
+    }
+
+    #[test]
+    fn random_projection_bounded_and_deterministic() {
+        let p = Projection::random(18, 2, 5);
+        let q = Projection::random(18, 2, 5);
+        let x: Vec<f64> = (0..18).map(|i| ((i as f64) / 9.0) - 1.0).collect();
+        let a = p.apply(&x);
+        assert_eq!(a, q.apply(&x));
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn distinct_inputs_stay_distinct() {
+        let p = Projection::random(4, 2, 1);
+        let a = p.apply(&[0.5, -0.5, 0.2, 0.9]);
+        let b = p.apply(&[-0.5, 0.5, -0.2, -0.9]);
+        assert!((a[0] - b[0]).abs() + (a[1] - b[1]).abs() > 1e-3);
+    }
+}

@@ -1,0 +1,129 @@
+//! Dirichlet-based GP classification (Milios et al. 2018; paper §5.2 and
+//! Appendix A.5): classification becomes C independent regressions with
+//! per-point *fixed* heteroscedastic Gaussian noise:
+//!
+//!   alpha_c = alpha_eps + 1{y = c}
+//!   sigma_c^2 = log(1 + 1/alpha_c)         (per-point noise)
+//!   y_tilde_c = log(alpha_c) - sigma_c^2/2 (regression target)
+//!
+//! WISKI absorbs the fixed noise by accumulating scaled rows (w/s, y/s)
+//! with the model's sigma^2 pinned at 1 (model.py docstring / A.5), which
+//! is exactly what `Wiski::observe_weighted` feeds through the `s` input.
+//! Predictions take the arg-max of the class posterior means.
+
+use anyhow::Result;
+
+use crate::gp::wiski::Wiski;
+use crate::gp::Prediction;
+
+pub const ALPHA_EPS: f64 = 0.01;
+
+/// Transformed regression target and noise scale for class c given label.
+pub fn dirichlet_target(is_class: bool) -> (f64, f64) {
+    let alpha = ALPHA_EPS + if is_class { 1.0 } else { 0.0 };
+    let sigma2 = (1.0 + 1.0 / alpha).ln();
+    let y = alpha.ln() - sigma2 / 2.0;
+    (y, sigma2.sqrt())
+}
+
+/// One-vs-all Dirichlet GP classifier over WISKI regressors.
+pub struct DirichletClassifier {
+    pub models: Vec<Wiski>,
+    n_observed: usize,
+}
+
+impl DirichletClassifier {
+    /// `models` must have `learn_noise = false` configs (sigma^2 pinned=1
+    /// is enforced here by fixing raw noise to softplus^-1(1)).
+    pub fn new(mut models: Vec<Wiski>) -> Self {
+        for m in &mut models {
+            m.cfg.learn_noise = false;
+            let last = m.theta.len() - 1;
+            m.theta[last] = crate::kernels::inv_softplus(1.0);
+        }
+        Self { models, n_observed: 0 }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn num_observed(&self) -> usize {
+        self.n_observed
+    }
+
+    pub fn observe(&mut self, x: &[f64], label: usize) -> Result<()> {
+        assert!(label < self.models.len());
+        for (c, model) in self.models.iter_mut().enumerate() {
+            let (y, s) = dirichlet_target(c == label);
+            model.observe_weighted(&[x.to_vec()], &[y], &[s])?;
+        }
+        self.n_observed += 1;
+        Ok(())
+    }
+
+    /// Per-class posterior marginals.
+    pub fn predict_marginals(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<Prediction>>> {
+        self.models.iter().map(|m| m.predict_full(xs)).collect()
+    }
+
+    /// Hard class predictions (arg-max posterior mean).
+    pub fn predict_class(&self, xs: &[Vec<f64>]) -> Result<Vec<usize>> {
+        let marg = self.predict_marginals(xs)?;
+        let n = xs.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut best = 0;
+            for c in 1..marg.len() {
+                if marg[c][i].mean > marg[best][i].mean {
+                    best = c;
+                }
+            }
+            out.push(best);
+        }
+        Ok(out)
+    }
+
+    /// Class probabilities via moment-matched softmax over posterior
+    /// samples (Milios et al. eq. 8, with `n_samples` MC draws using a
+    /// deterministic stream for reproducibility).
+    pub fn predict_proba(&self, xs: &[Vec<f64>], n_samples: usize, seed: u64) -> Result<Vec<Vec<f64>>> {
+        let marg = self.predict_marginals(xs)?;
+        let c = marg.len();
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut out = vec![vec![0.0; c]; xs.len()];
+        for i in 0..xs.len() {
+            for _ in 0..n_samples {
+                let mut logits = Vec::with_capacity(c);
+                for cls in marg.iter() {
+                    let p = cls[i];
+                    logits.push(p.mean + p.var_f.sqrt() * rng.normal());
+                }
+                let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+                let z: f64 = exps.iter().sum();
+                for (cls, e) in exps.iter().enumerate() {
+                    out[i][cls] += e / z / n_samples as f64;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirichlet_transform_separates_classes() {
+        let (y_pos, s_pos) = dirichlet_target(true);
+        let (y_neg, s_neg) = dirichlet_target(false);
+        assert!(y_pos > y_neg);
+        // the "off" class has a much larger (less trusted) noise scale
+        assert!(s_neg > s_pos);
+        // exact values from the Milios et al. formulas with alpha_eps=0.01
+        assert!((y_pos - ((1.01f64).ln() - (1.0f64 + 1.0 / 1.01).ln() / 2.0)).abs() < 1e-12);
+        assert!((s_neg * s_neg - (1.0f64 + 100.0).ln()).abs() < 1e-12);
+    }
+}

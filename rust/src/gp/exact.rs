@@ -1,0 +1,319 @@
+//! Exact GP baseline (no kernel approximation), with the paper's two solve
+//! strategies: incremental Cholesky (O(n^2) per new point, O(n^3) refits —
+//! "Exact-Cholesky" in Fig. 2) and conjugate gradients ("Exact-PCG",
+//! O(j n^2)).  Hyperparameters are trained by analytic MLL gradients over
+//! the dense kernel matrix, the honest cubic cost WISKI is compared
+//! against.
+
+use anyhow::Result;
+
+use crate::gp::{OnlineGp, Prediction};
+use crate::kernels::Kernel;
+use crate::linalg::{cg_solve, CgOptions, Cholesky, Mat};
+use crate::optim::Adam;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveMethod {
+    Cholesky,
+    Cg,
+}
+
+pub struct ExactGp {
+    pub kernel: Kernel,
+    pub theta: Vec<f64>,
+    pub method: SolveMethod,
+    /// Gradient steps per observation (0 = fixed hyperparameters).
+    pub grad_steps: usize,
+    adam: Adam,
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    chol: Option<Cholesky>,
+    /// alpha = (K + s2 I)^{-1} y, refreshed after observe/refit.
+    alpha: Vec<f64>,
+    name: String,
+}
+
+impl ExactGp {
+    pub fn new(kernel: Kernel, method: SolveMethod, lr: f64, grad_steps: usize) -> Self {
+        let theta = kernel.default_theta(0.2);
+        let dim = theta.len();
+        let name = match method {
+            SolveMethod::Cholesky => "exact-cholesky",
+            SolveMethod::Cg => "exact-cg",
+        };
+        Self {
+            kernel,
+            theta,
+            method,
+            grad_steps,
+            adam: Adam::new(dim, lr),
+            x: vec![],
+            y: vec![],
+            chol: None,
+            alpha: vec![],
+            name: name.into(),
+        }
+    }
+
+    fn kmat(&self) -> Mat {
+        let n = self.x.len();
+        let s2 = self.kernel.noise_var(&self.theta);
+        Mat::from_fn(n, n, |i, j| {
+            self.kernel.eval(&self.theta, &self.x[i], &self.x[j])
+                + if i == j { s2 } else { 0.0 }
+        })
+    }
+
+    /// Refresh alpha (and the Cholesky factor when out of date).
+    fn refresh(&mut self, refactor: bool) -> Result<()> {
+        let n = self.x.len();
+        if n == 0 {
+            self.alpha.clear();
+            return Ok(());
+        }
+        match self.method {
+            SolveMethod::Cholesky => {
+                if refactor || self.chol.is_none() {
+                    self.chol = Some(Cholesky::factor(&self.kmat(), 1e-6)?);
+                }
+                self.alpha = self.chol.as_ref().unwrap().solve(&self.y);
+            }
+            SolveMethod::Cg => {
+                let k = self.kmat();
+                let (a, _iters) = cg_solve(|v| k.matvec(v), &self.y, CgOptions::default());
+                self.alpha = a;
+            }
+        }
+        Ok(())
+    }
+
+    /// Analytic MLL gradient: dMLL/dtheta_k = 1/2 tr((aa^T - K^{-1}) dK).
+    /// O(n^3); this is exactly the cost profile Fig. 2 ascribes to exact GPs.
+    fn mll_grad(&mut self) -> Result<Vec<f64>> {
+        let n = self.x.len();
+        let k = self.kmat();
+        let ch = Cholesky::factor(&k, 1e-6)?;
+        let alpha = ch.solve(&self.y);
+        // K^{-1} via n solves (dense inverse)
+        let mut kinv = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            let col = ch.solve(&e);
+            for i in 0..n {
+                kinv[(i, j)] = col[i];
+            }
+        }
+        let p = self.theta.len();
+        let mut grad = vec![0.0; p];
+        let eps = 1e-4;
+        // dK/dtheta by central differences per parameter (kernel-generic),
+        // contracted against (aa^T - K^{-1}): still O(n^2 p) after the
+        // O(n^3) factorization above.
+        for t in 0..p {
+            let mut tp = self.theta.clone();
+            let mut tm = self.theta.clone();
+            tp[t] += eps;
+            tm[t] -= eps;
+            let s2p = self.kernel.noise_var(&tp);
+            let s2m = self.kernel.noise_var(&tm);
+            let mut acc = 0.0;
+            for i in 0..n {
+                for j in 0..n {
+                    let dk = (self.kernel.eval(&tp, &self.x[i], &self.x[j])
+                        + if i == j { s2p } else { 0.0 }
+                        - self.kernel.eval(&tm, &self.x[i], &self.x[j])
+                        - if i == j { s2m } else { 0.0 })
+                        / (2.0 * eps);
+                    acc += (alpha[i] * alpha[j] - kinv[(i, j)]) * dk;
+                }
+            }
+            grad[t] = 0.5 * acc;
+        }
+        Ok(grad)
+    }
+
+    pub fn mll(&self) -> Result<f64> {
+        let n = self.x.len();
+        if n == 0 {
+            return Ok(0.0);
+        }
+        let ch = Cholesky::factor(&self.kmat(), 1e-6)?;
+        let alpha = ch.solve(&self.y);
+        let quad: f64 = alpha.iter().zip(&self.y).map(|(a, b)| a * b).sum();
+        Ok(-0.5 * quad - 0.5 * ch.logdet() - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln())
+    }
+}
+
+impl OnlineGp for ExactGp {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_observed(&self) -> usize {
+        self.y.len()
+    }
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        // incremental factor extension (Cholesky) or lazy (CG)
+        if self.method == SolveMethod::Cholesky && self.chol.is_some() && self.grad_steps == 0 {
+            let col: Vec<f64> = self
+                .x
+                .iter()
+                .map(|xi| self.kernel.eval(&self.theta, xi, x))
+                .collect();
+            let d = self.kernel.diag(&self.theta, x) + self.kernel.noise_var(&self.theta);
+            self.chol.as_mut().unwrap().extend(&col, d, 1e-6)?;
+            self.x.push(x.to_vec());
+            self.y.push(y);
+            self.alpha = self.chol.as_ref().unwrap().solve(&self.y);
+            return Ok(());
+        }
+        self.x.push(x.to_vec());
+        self.y.push(y);
+        for _ in 0..self.grad_steps {
+            let g = self.mll_grad()?;
+            let neg: Vec<f64> = g.iter().map(|v| -v).collect();
+            let mut theta = std::mem::take(&mut self.theta);
+            self.adam.step(&mut theta, &neg);
+            self.theta = theta;
+        }
+        self.refresh(true)
+    }
+
+    fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+        if self.alpha.len() != self.y.len() {
+            self.refresh(true)?;
+        }
+        let s2 = self.kernel.noise_var(&self.theta);
+        let n = self.x.len();
+        // hoisted out of the query loop (perf: building K per query made
+        // CG-variance evaluation O(b n^2) kernel evals; see EXPERIMENTS §Perf)
+        let kmat_cg = if self.method == SolveMethod::Cg && n > 0 {
+            Some(self.kmat())
+        } else {
+            None
+        };
+        let mut out = Vec::with_capacity(xs.len());
+        for q in xs {
+            let kx: Vec<f64> = self
+                .x
+                .iter()
+                .map(|xi| self.kernel.eval(&self.theta, xi, q))
+                .collect();
+            let mean: f64 = kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+            let var_f = if n == 0 {
+                self.kernel.diag(&self.theta, q)
+            } else {
+                let v = match self.method {
+                    SolveMethod::Cholesky => {
+                        if self.chol.is_none() {
+                            self.refresh(true)?;
+                        }
+                        self.chol.as_ref().unwrap().solve(&kx)
+                    }
+                    SolveMethod::Cg => {
+                        let k = kmat_cg.as_ref().unwrap();
+                        cg_solve(|v| k.matvec(v), &kx, CgOptions::default()).0
+                    }
+                };
+                let red: f64 = kx.iter().zip(&v).map(|(a, b)| a * b).sum();
+                (self.kernel.diag(&self.theta, q) - red).max(1e-10)
+            };
+            out.push(Prediction { mean, var_f, var_y: var_f + s2 });
+        }
+        Ok(out)
+    }
+
+    fn refit(&mut self, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            let g = self.mll_grad()?;
+            let neg: Vec<f64> = g.iter().map(|v| -v).collect();
+            let mut theta = std::mem::take(&mut self.theta);
+            self.adam.step(&mut theta, &neg);
+            self.theta = theta;
+        }
+        self.refresh(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn toy_stream(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.range(-1.0, 1.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (3.0 * x[0]).sin() + 0.05 * rng.normal()).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_smooth_function() {
+        let mut gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let (xs, ys) = toy_stream(40, 1);
+        gp.observe_batch(&xs, &ys).unwrap();
+        gp.refit(30).unwrap();
+        let preds = gp.predict(&xs).unwrap();
+        let rmse = crate::metrics::rmse(
+            &preds.iter().map(|p| p.mean).collect::<Vec<_>>(),
+            &ys,
+        );
+        assert!(rmse < 0.2, "rmse={rmse}");
+    }
+
+    #[test]
+    fn cg_and_cholesky_agree() {
+        let (xs, ys) = toy_stream(30, 2);
+        let mut a = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let mut b = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cg, 0.05, 0);
+        a.observe_batch(&xs, &ys).unwrap();
+        b.observe_batch(&xs, &ys).unwrap();
+        let q = vec![vec![0.3], vec![-0.6]];
+        let pa = a.predict(&q).unwrap();
+        let pb = b.predict(&q).unwrap();
+        for (u, v) in pa.iter().zip(&pb) {
+            assert!((u.mean - v.mean).abs() < 1e-5);
+            assert!((u.var_f - v.var_f).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn incremental_cholesky_extension_matches_batch() {
+        let (xs, ys) = toy_stream(25, 3);
+        let mut inc = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        // prime with 5 then extend one by one
+        inc.observe_batch(&xs[..5], &ys[..5]).unwrap();
+        inc.predict(&[vec![0.0]]).unwrap(); // force factorization
+        for i in 5..25 {
+            inc.observe(&xs[i], ys[i]).unwrap();
+        }
+        let mut batch = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        batch.observe_batch(&xs, &ys).unwrap();
+        let q = vec![vec![0.1]];
+        let a = inc.predict(&q).unwrap()[0];
+        let b = batch.predict(&q).unwrap()[0];
+        assert!((a.mean - b.mean).abs() < 1e-8);
+    }
+
+    #[test]
+    fn variance_shrinks_near_data() {
+        let mut gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let (xs, ys) = toy_stream(20, 4);
+        gp.observe_batch(&xs, &ys).unwrap();
+        let p = gp.predict(&[xs[0].clone(), vec![5.0]]).unwrap();
+        assert!(p[0].var_f < p[1].var_f);
+    }
+
+    #[test]
+    fn mll_grad_improves_mll() {
+        let mut gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let (xs, ys) = toy_stream(25, 5);
+        gp.observe_batch(&xs, &ys).unwrap();
+        let before = gp.mll().unwrap();
+        gp.refit(25).unwrap();
+        let after = gp.mll().unwrap();
+        assert!(after > before, "{after} <= {before}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Local GPs baseline (Nguyen-Tuong et al. 2008): a pool of small exact GPs,
+//! each owning at most n_max points; new observations are routed to the
+//! nearest local model (by kernel distance to its center), spawning a new
+//! model when nothing is close enough.  Predictions are a kernel-weighted
+//! blend of the nearby local posteriors.
+
+use anyhow::Result;
+
+use crate::gp::{OnlineGp, Prediction};
+use crate::kernels::Kernel;
+use crate::linalg::Cholesky;
+use crate::linalg::Mat;
+
+struct LocalModel {
+    center: Vec<f64>,
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    chol: Option<Cholesky>,
+    alpha: Vec<f64>,
+}
+
+impl LocalModel {
+    fn refresh(&mut self, kernel: &Kernel, theta: &[f64]) -> Result<()> {
+        let n = self.x.len();
+        let s2 = kernel.noise_var(theta);
+        let k = Mat::from_fn(n, n, |i, j| {
+            kernel.eval(theta, &self.x[i], &self.x[j]) + if i == j { s2 } else { 0.0 }
+        });
+        let ch = Cholesky::factor(&k, 1e-6)?;
+        self.alpha = ch.solve(&self.y);
+        self.chol = Some(ch);
+        Ok(())
+    }
+
+    fn update_center(&mut self) {
+        let n = self.x.len().max(1) as f64;
+        let d = self.center.len();
+        for k in 0..d {
+            self.center[k] = self.x.iter().map(|p| p[k]).sum::<f64>() / n;
+        }
+    }
+}
+
+/// The LGP pool.
+pub struct LocalGps {
+    pub kernel: Kernel,
+    pub theta: Vec<f64>,
+    /// Max points per local model (paper sets n_max = m).
+    pub n_max: usize,
+    /// Kernel-correlation threshold for opening a new model.
+    pub spawn_threshold: f64,
+    models: Vec<LocalModel>,
+    n_observed: usize,
+}
+
+impl LocalGps {
+    pub fn new(kernel: Kernel, n_max: usize) -> Self {
+        let theta = kernel.default_theta(0.2);
+        Self { kernel, theta, n_max, spawn_threshold: 0.5, models: vec![], n_observed: 0 }
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.models.len()
+    }
+
+    fn nearest(&self, x: &[f64]) -> Option<(usize, f64)> {
+        let kxx = self.kernel.diag(&self.theta, x).max(1e-12);
+        self.models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                (i, self.kernel.eval(&self.theta, &m.center, x) / kxx)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+}
+
+impl OnlineGp for LocalGps {
+    fn name(&self) -> &str {
+        "lgp"
+    }
+
+    fn num_observed(&self) -> usize {
+        self.n_observed
+    }
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.n_observed += 1;
+        let target = match self.nearest(x) {
+            Some((i, sim)) if sim >= self.spawn_threshold && self.models[i].x.len() < self.n_max => {
+                Some(i)
+            }
+            Some((i, sim)) if sim >= self.spawn_threshold => {
+                // full model: drop its oldest point (sliding window)
+                self.models[i].x.remove(0);
+                self.models[i].y.remove(0);
+                Some(i)
+            }
+            _ => None,
+        };
+        match target {
+            Some(i) => {
+                let m = &mut self.models[i];
+                m.x.push(x.to_vec());
+                m.y.push(y);
+                m.update_center();
+                m.refresh(&self.kernel, &self.theta)?;
+            }
+            None => {
+                let mut m = LocalModel {
+                    center: x.to_vec(),
+                    x: vec![x.to_vec()],
+                    y: vec![y],
+                    chol: None,
+                    alpha: vec![],
+                };
+                m.refresh(&self.kernel, &self.theta)?;
+                self.models.push(m);
+            }
+        }
+        Ok(())
+    }
+
+    fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+        let s2 = self.kernel.noise_var(&self.theta);
+        let prior = |q: &[f64]| Prediction {
+            mean: 0.0,
+            var_f: self.kernel.diag(&self.theta, q),
+            var_y: self.kernel.diag(&self.theta, q) + s2,
+        };
+        let mut out = Vec::with_capacity(xs.len());
+        for q in xs {
+            if self.models.is_empty() {
+                out.push(prior(q));
+                continue;
+            }
+            // blend the top local models by center similarity
+            let mut weights = Vec::with_capacity(self.models.len());
+            for m in &self.models {
+                weights.push(self.kernel.eval(&self.theta, &m.center, q).max(1e-12));
+            }
+            let wsum: f64 = weights.iter().sum();
+            let mut mean = 0.0;
+            let mut var = 0.0;
+            for (m, w) in self.models.iter().zip(&weights) {
+                let kx: Vec<f64> = m
+                    .x
+                    .iter()
+                    .map(|xi| self.kernel.eval(&self.theta, xi, q))
+                    .collect();
+                let mu: f64 = kx.iter().zip(&m.alpha).map(|(a, b)| a * b).sum();
+                let v = m
+                    .chol
+                    .as_ref()
+                    .map(|ch| {
+                        let sol = ch.solve(&kx);
+                        (self.kernel.diag(&self.theta, q)
+                            - kx.iter().zip(&sol).map(|(a, b)| a * b).sum::<f64>())
+                        .max(1e-10)
+                    })
+                    .unwrap_or_else(|| self.kernel.diag(&self.theta, q));
+                mean += w / wsum * mu;
+                var += w / wsum * v;
+            }
+            out.push(Prediction { mean, var_f: var, var_y: var + s2 });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn spawns_multiple_models_and_bounds_size() {
+        let mut lgp = LocalGps::new(Kernel::Rbf { dim: 1 }, 10);
+        let mut rng = Rng::new(1);
+        for _ in 0..80 {
+            let x = rng.range(-1.0, 1.0);
+            lgp.observe(&[x], (4.0 * x).sin()).unwrap();
+        }
+        assert!(lgp.num_models() >= 2, "models={}", lgp.num_models());
+        for m in &lgp.models {
+            assert!(m.x.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn local_fit_tracks_function() {
+        let mut lgp = LocalGps::new(Kernel::Rbf { dim: 1 }, 16);
+        let mut rng = Rng::new(2);
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for _ in 0..120 {
+            let x = rng.range(-1.0, 1.0);
+            let y = (3.0 * x).sin() + 0.05 * rng.normal();
+            lgp.observe(&[x], y).unwrap();
+            xs.push(vec![x]);
+            ys.push(y);
+        }
+        let preds = lgp.predict(&xs).unwrap();
+        let rmse = crate::metrics::rmse(
+            &preds.iter().map(|p| p.mean).collect::<Vec<_>>(),
+            &ys,
+        );
+        assert!(rmse < 0.45, "rmse={rmse}");
+    }
+
+    #[test]
+    fn empty_pool_returns_prior() {
+        let mut lgp = LocalGps::new(Kernel::Rbf { dim: 2 }, 8);
+        let p = lgp.predict(&[vec![0.0, 0.0]]).unwrap()[0];
+        assert_eq!(p.mean, 0.0);
+        assert!(p.var_f > 0.5);
+    }
+}

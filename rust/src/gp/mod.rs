@@ -1,0 +1,61 @@
+//! Online Gaussian-process models: WISKI (the paper's contribution, backed
+//! by AOT artifacts) and the baselines it is evaluated against (exact GP,
+//! local GPs, O-SVGP, O-SGPR), plus the Dirichlet classification wrapper.
+
+mod dirichlet;
+mod exact;
+mod lgp;
+mod osgpr;
+mod osvgp;
+pub mod ski;
+mod wiski;
+
+pub use dirichlet::DirichletClassifier;
+pub use exact::{ExactGp, SolveMethod};
+pub use lgp::LocalGps;
+pub use osgpr::OSgpr;
+pub use osvgp::OSvgp;
+pub use wiski::{Wiski, WiskiConfig};
+
+use anyhow::Result;
+
+/// Posterior prediction for one query point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Prediction {
+    pub mean: f64,
+    /// Latent (function) variance.
+    pub var_f: f64,
+    /// Predictive variance including observation noise.
+    pub var_y: f64,
+}
+
+/// The common online-GP contract the coordinator and benches drive.
+///
+/// `observe` folds a single observation into the posterior and performs the
+/// model's per-step parameter update (one gradient step for the scalable
+/// models, per the paper's protocol); `predict` returns posterior marginals.
+pub trait OnlineGp {
+    fn name(&self) -> &str;
+
+    /// Number of observations conditioned on so far.
+    fn num_observed(&self) -> usize;
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()>;
+
+    /// Batched observation (default: sequential).
+    fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        for (x, y) in xs.iter().zip(ys) {
+            self.observe(x, *y)?;
+        }
+        Ok(())
+    }
+
+    fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>>;
+
+    /// Extra optimization passes over the current posterior state (model
+    /// refits between BO iterations). Default: no-op for models without a
+    /// refit channel.
+    fn refit(&mut self, _steps: usize) -> Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,242 @@
+//! O-SVGP baseline driver: streaming sparse variational GP (Bui et al.
+//! 2017) with the generalized-VI beta weighting of the paper's Appendix B.
+//!
+//! The objective and its gradients are AOT artifacts
+//! (python/compile/osvgp.py); this struct owns the variational state
+//! (q_mu, q_raw), the inducing locations, the old-posterior snapshot, and
+//! Adam.  After each observation batch the old posterior is refreshed
+//! (old <- current), which is Bui et al.'s streaming recursion.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::Projection;
+use crate::gp::{OnlineGp, Prediction};
+use crate::kernels::{inv_softplus, Kernel};
+use crate::optim::Adam;
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Tensor};
+
+pub struct OSvgp {
+    rt: Arc<Runtime>,
+    kind: String,
+    d: usize,
+    pub m: usize,
+    step_name: String,
+    predict_name: String,
+    qfactor_name: String,
+    step_q: usize,
+    predict_b: usize,
+    /// GVI prior down-weighting (paper Appendix B; ablated in Fig. A.3).
+    pub beta: f64,
+    /// Gradient steps per observed batch (ablated in Fig. A.2).
+    pub grad_steps: usize,
+    kernel: Kernel,
+    pub theta: Vec<f64>,
+    theta_old: Vec<f64>,
+    q_mu: Vec<f64>,
+    q_raw: Vec<f64>,
+    old_mu: Vec<f32>,
+    old_l: Vec<f32>,
+    z: Vec<f32>,
+    adam_mu: Adam,
+    adam_raw: Adam,
+    adam_theta: Adam,
+    projection: Projection,
+    n_observed: usize,
+    pub last_loss: f64,
+}
+
+impl OSvgp {
+    /// `m` and `kind`/`d` must match an artifact family in the manifest.
+    pub fn new(
+        rt: Arc<Runtime>,
+        kind: &str,
+        d: usize,
+        m: usize,
+        beta: f64,
+        lr: f64,
+        projection: Projection,
+        seed: u64,
+    ) -> Result<Self> {
+        let kernel = Kernel::from_kind(kind, d);
+        let mut step_q = None;
+        let mut predict_b = None;
+        for name in rt.manifest().names() {
+            if let Some(rest) = name.strip_prefix(&format!("osvgp_step_{kind}_d{d}_m{m}_q")) {
+                step_q = rest.parse::<usize>().ok().or(step_q);
+            }
+            if let Some(rest) = name.strip_prefix(&format!("osvgp_predict_{kind}_d{d}_m{m}_b")) {
+                predict_b = rest.parse::<usize>().ok().or(predict_b);
+            }
+        }
+        let step_q = step_q.with_context(|| format!("no osvgp_step artifact kind={kind} d={d} m={m}"))?;
+        let predict_b =
+            predict_b.with_context(|| format!("no osvgp_predict artifact kind={kind} d={d} m={m}"))?;
+
+        // inducing locations: uniform random over [-1,1]^d (re-seeded);
+        // fixed after init (DESIGN.md §4 simplification).
+        let mut rng = Rng::new(seed ^ 0x05E6);
+        let mut z = Vec::with_capacity(m * d);
+        for _ in 0..m * d {
+            z.push(rng.range(-1.0, 1.0) as f32);
+        }
+
+        let theta = kernel.default_theta(0.2);
+        // q_raw diagonal initialized so softplus(diag) ~= 1 (prior scale).
+        let mut q_raw = vec![0.0f64; m * m];
+        for i in 0..m {
+            q_raw[i * m + i] = inv_softplus(1.0);
+        }
+        let old_mu = vec![0f32; m];
+        let mut old_l = vec![0f32; m * m];
+        for i in 0..m {
+            old_l[i * m + i] = 1.0;
+        }
+        Ok(Self {
+            rt,
+            kind: kind.into(),
+            d,
+            m,
+            step_name: format!("osvgp_step_{kind}_d{d}_m{m}_q{step_q}"),
+            predict_name: format!("osvgp_predict_{kind}_d{d}_m{m}_b{predict_b}"),
+            qfactor_name: format!("osvgp_qfactor_m{m}"),
+            step_q,
+            predict_b,
+            beta,
+            grad_steps: 1,
+            theta_old: theta.clone(),
+            kernel,
+            theta,
+            q_mu: vec![0.0; m],
+            q_raw,
+            old_mu,
+            old_l,
+            z,
+            adam_mu: Adam::new(m, lr * 10.0),
+            adam_raw: Adam::new(m * m, lr * 10.0),
+            adam_theta: Adam::new(0, lr), // resized below
+            projection,
+            n_observed: 0,
+            last_loss: f64::NAN,
+        }
+        .fix_adam(lr))
+    }
+
+    fn fix_adam(mut self, lr: f64) -> Self {
+        self.adam_theta = Adam::new(self.theta.len(), lr);
+        self
+    }
+
+    fn f32v(v: &[f64]) -> Vec<f32> {
+        v.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Snapshot the current posterior as the "old" posterior.
+    fn snapshot(&mut self) -> Result<()> {
+        let out = self.rt.exec(
+            &self.qfactor_name,
+            &[Tensor::new(vec![self.m, self.m], Self::f32v(&self.q_raw))],
+        )?;
+        self.old_l = out[0].data.clone();
+        self.old_mu = Self::f32v(&self.q_mu);
+        self.theta_old = self.theta.clone();
+        Ok(())
+    }
+}
+
+impl OnlineGp for OSvgp {
+    fn name(&self) -> &str {
+        "osvgp"
+    }
+
+    fn num_observed(&self) -> usize {
+        self.n_observed
+    }
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.observe_batch(&[x.to_vec()], &[y])
+    }
+
+    fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        let q = self.step_q;
+        let d = self.d;
+        for start in (0..xs.len()).step_by(q) {
+            let end = (start + q).min(xs.len());
+            let mut xb = vec![0f32; q * d];
+            let mut yb = vec![0f32; q];
+            let mut mb = vec![0f32; q];
+            for i in start..end {
+                let proj = self.projection.apply(&xs[i]);
+                for (k, v) in proj.iter().enumerate() {
+                    xb[(i - start) * d + k] = *v as f32;
+                }
+                yb[i - start] = ys[i] as f32;
+                mb[i - start] = 1.0;
+            }
+            for _ in 0..self.grad_steps {
+                let inputs = vec![
+                    Tensor::vec1(Self::f32v(&self.q_mu)),
+                    Tensor::new(vec![self.m, self.m], Self::f32v(&self.q_raw)),
+                    Tensor::vec1(Self::f32v(&self.theta)),
+                    Tensor::new(vec![self.m, self.d], self.z.clone()),
+                    Tensor::vec1(Self::f32v(&self.theta_old)),
+                    Tensor::vec1(self.old_mu.clone()),
+                    Tensor::new(vec![self.m, self.m], self.old_l.clone()),
+                    Tensor::new(vec![q, d], xb.clone()),
+                    Tensor::vec1(yb.clone()),
+                    Tensor::vec1(mb.clone()),
+                    Tensor::scalar(self.beta as f32),
+                ];
+                let out = self.rt.exec(&self.step_name, &inputs)?;
+                self.last_loss = out[0].item() as f64;
+                let g_mu: Vec<f64> = out[1].data.iter().map(|&v| v as f64).collect();
+                let g_raw: Vec<f64> = out[2].data.iter().map(|&v| v as f64).collect();
+                let g_theta: Vec<f64> = out[3].data.iter().map(|&v| v as f64).collect();
+                let mut mu = std::mem::take(&mut self.q_mu);
+                self.adam_mu.step(&mut mu, &g_mu);
+                self.q_mu = mu;
+                let mut raw = std::mem::take(&mut self.q_raw);
+                self.adam_raw.step(&mut raw, &g_raw);
+                self.q_raw = raw;
+                let mut th = std::mem::take(&mut self.theta);
+                self.adam_theta.step(&mut th, &g_theta);
+                self.theta = th;
+            }
+            self.snapshot()?;
+            self.n_observed += end - start;
+        }
+        Ok(())
+    }
+
+    fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+        let b = self.predict_b;
+        let d = self.d;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(b) {
+            let mut xbuf = vec![0f32; b * d];
+            for (i, p) in chunk.iter().enumerate() {
+                let proj = self.projection.apply(p);
+                for (k, v) in proj.iter().enumerate() {
+                    xbuf[i * d + k] = *v as f32;
+                }
+            }
+            let inputs = vec![
+                Tensor::vec1(Self::f32v(&self.q_mu)),
+                Tensor::new(vec![self.m, self.m], Self::f32v(&self.q_raw)),
+                Tensor::vec1(Self::f32v(&self.theta)),
+                Tensor::new(vec![self.m, self.d], self.z.clone()),
+                Tensor::new(vec![b, d], xbuf),
+            ];
+            let res = self.rt.exec(&self.predict_name, &inputs)?;
+            let sig2 = res[2].item() as f64;
+            for i in 0..chunk.len() {
+                let mean = res[0].data[i] as f64;
+                let var_f = res[1].data[i] as f64;
+                out.push(Prediction { mean, var_f, var_y: var_f + sig2 });
+            }
+        }
+        Ok(out)
+    }
+}

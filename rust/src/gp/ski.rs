@@ -1,0 +1,130 @@
+//! Rust mirror of the SKI interpolation primitive (cubic convolution on a
+//! regular lattice).  The hot path uses the Pallas kernel inside the AOT
+//! artifacts; this mirror exists for (a) integration tests cross-checking
+//! artifact numerics, (b) the pure-Rust baselines that need w(x) rows
+//! (O-SGPR inducing structure), and (c) lattice coordinate generation.
+
+/// Keys' cubic convolution kernel with a = -1/2 (matches kernels/ref.py).
+pub fn cubic_kernel(s: f64) -> f64 {
+    let t = s.abs();
+    if t <= 1.0 {
+        (1.5 * t - 2.5) * t * t + 1.0
+    } else if t < 2.0 {
+        ((-0.5 * t + 2.5) * t - 4.0) * t + 2.0
+    } else {
+        0.0
+    }
+}
+
+/// Regular lattice over [-1, 1]^d with g points per dimension (m = g^d).
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    pub g: usize,
+    pub d: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Lattice {
+    pub fn new(g: usize, d: usize) -> Self {
+        Self { g, d, lo: -1.0, hi: 1.0 }
+    }
+
+    pub fn m(&self) -> usize {
+        self.g.pow(self.d as u32)
+    }
+
+    /// Coordinates of lattice point `idx` (row-major, matching
+    /// kernels/ref.py:lattice_coords).
+    pub fn coords(&self, idx: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        let mut rem = idx;
+        let h = (self.hi - self.lo) / (self.g - 1) as f64;
+        for k in (0..self.d).rev() {
+            let j = rem % self.g;
+            rem /= self.g;
+            out[k] = self.lo + h * j as f64;
+        }
+        out
+    }
+
+    /// Dense interpolation row w(x) of length m (exactly 4^d non-zeros).
+    pub fn interp_row(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.d);
+        let g = self.g;
+        let h = (self.hi - self.lo) / (g - 1) as f64;
+        // per-dimension taps: (base index, 4 weights)
+        let mut taps: Vec<(usize, [f64; 4])> = Vec::with_capacity(self.d);
+        for k in 0..self.d {
+            let mut u = (x[k] - self.lo) / h;
+            u = u.clamp(1.0, (g - 2) as f64 - 1e-6);
+            let j0 = (u.floor() as usize).saturating_sub(1);
+            let mut w = [0.0; 4];
+            for (t, wt) in w.iter_mut().enumerate() {
+                *wt = cubic_kernel(u - (j0 + t) as f64);
+            }
+            taps.push((j0, w));
+        }
+        let mut row = vec![0.0; self.m()];
+        // tensor product over 4^d combinations
+        let combos = 4usize.pow(self.d as u32);
+        for c in 0..combos {
+            let mut idx = 0usize;
+            let mut weight = 1.0;
+            let mut rem = c;
+            for (j0, w) in &taps {
+                let t = rem % 4;
+                rem /= 4;
+                idx = idx * self.g + (j0 + t);
+                weight *= w[t];
+            }
+            row[idx] += weight;
+        }
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one_interior() {
+        let lat = Lattice::new(16, 2);
+        for x in [[0.0, 0.0], [0.3, -0.4], [0.71, 0.13]] {
+            let row = lat.interp_row(&x);
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+            assert_eq!(row.iter().filter(|v| **v != 0.0).count(), 16);
+        }
+    }
+
+    #[test]
+    fn interpolates_linear_functions_exactly() {
+        // cubic convolution reproduces degree-1 polynomials exactly
+        let lat = Lattice::new(32, 1);
+        let vals: Vec<f64> = (0..32).map(|i| lat.coords(i)[0] * 2.0 + 0.5).collect();
+        for x in [-0.5, 0.12, 0.77] {
+            let row = lat.interp_row(&[x]);
+            let approx: f64 = row.iter().zip(&vals).map(|(w, v)| w * v).sum();
+            assert!((approx - (2.0 * x + 0.5)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn coords_row_major_matches_python() {
+        let lat = Lattice::new(3, 2); // points at -1, 0, 1
+        assert_eq!(lat.coords(0), vec![-1.0, -1.0]);
+        assert_eq!(lat.coords(1), vec![-1.0, 0.0]);
+        assert_eq!(lat.coords(3), vec![0.0, -1.0]);
+        assert_eq!(lat.coords(8), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn cubic_kernel_partition_properties() {
+        assert_eq!(cubic_kernel(0.0), 1.0);
+        assert_eq!(cubic_kernel(1.0), 0.0);
+        assert_eq!(cubic_kernel(2.0), 0.0);
+        assert!((cubic_kernel(0.5) + cubic_kernel(-0.5) + cubic_kernel(1.5) + cubic_kernel(-1.5) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Covariance functions (Rust mirror of python/compile/covfns.py).
+//!
+//! Used by the pure-Rust baselines (exact GP, local GPs, O-SGPR) and by the
+//! integration tests that cross-check the AOT artifacts.  The softplus
+//! parameterization matches covfns.py bit-for-bit in convention (raw
+//! parameters, softplus + 1e-6 floors) so theta buffers are interchangeable
+//! between the artifact path and the native path.
+
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+pub fn inv_softplus(y: f64) -> f64 {
+    if y > 30.0 {
+        y
+    } else {
+        (y.exp() - 1.0).max(1e-12).ln()
+    }
+}
+
+/// Kernel family, mirroring the `kind` strings in the artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Kernel {
+    /// RBF with ARD lengthscales; theta = [raw_ls; d, raw_os, raw_noise].
+    Rbf { dim: usize },
+    /// Matern-1/2 (exponential); same theta layout as RBF.
+    Matern12 { dim: usize },
+    /// Spectral mixture with q components (1-D);
+    /// theta = [raw_w; q, raw_mu; q, raw_v; q, raw_noise].
+    SpectralMixture { q: usize },
+}
+
+impl Kernel {
+    pub fn from_kind(kind: &str, dim: usize) -> Self {
+        match kind {
+            "rbf" => Kernel::Rbf { dim },
+            "matern12" => Kernel::Matern12 { dim },
+            k if k.starts_with("sm") => Kernel::SpectralMixture { q: k[2..].parse().unwrap() },
+            other => panic!("unknown kernel kind {other}"),
+        }
+    }
+
+    pub fn theta_dim(&self) -> usize {
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => dim + 2,
+            Kernel::SpectralMixture { q } => 3 * q + 1,
+        }
+    }
+
+    /// Observation noise variance sigma^2 (last theta entry).
+    pub fn noise_var(&self, theta: &[f64]) -> f64 {
+        softplus(theta[theta.len() - 1]) + 1e-6
+    }
+
+    /// k(a, b).
+    pub fn eval(&self, theta: &[f64], a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Kernel::Rbf { dim } => {
+                let os2 = softplus(theta[*dim]) + 1e-6;
+                let mut d2 = 0.0;
+                for k in 0..*dim {
+                    let ls = softplus(theta[k]) + 1e-6;
+                    let t = (a[k] - b[k]) / ls;
+                    d2 += t * t;
+                }
+                os2 * (-0.5 * d2).exp()
+            }
+            Kernel::Matern12 { dim } => {
+                let os2 = softplus(theta[*dim]) + 1e-6;
+                let mut d2 = 0.0;
+                for k in 0..*dim {
+                    let ls = softplus(theta[k]) + 1e-6;
+                    let t = (a[k] - b[k]) / ls;
+                    d2 += t * t;
+                }
+                os2 * (-(d2 + 1e-12).sqrt()).exp()
+            }
+            Kernel::SpectralMixture { q } => {
+                let tau = a[0] - b[0];
+                let t2 = tau * tau;
+                let mut k_val = 0.0;
+                for i in 0..*q {
+                    let w = softplus(theta[i]) + 1e-8;
+                    let mu = softplus(theta[q + i]);
+                    let v = softplus(theta[2 * q + i]) + 1e-8;
+                    k_val += w
+                        * (-2.0 * std::f64::consts::PI.powi(2) * t2 * v).exp()
+                        * (2.0 * std::f64::consts::PI * mu * tau).cos();
+                }
+                k_val
+            }
+        }
+    }
+
+    /// k(x, x).
+    pub fn diag(&self, theta: &[f64], x: &[f64]) -> f64 {
+        self.eval(theta, x, x)
+    }
+
+    /// Default raw theta: ls=0.3, outputscale=1.0, noise = noise_init.
+    pub fn default_theta(&self, noise_init: f64) -> Vec<f64> {
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
+                let mut t = vec![inv_softplus(0.3); *dim];
+                t.push(inv_softplus(1.0));
+                t.push(inv_softplus(noise_init));
+                t
+            }
+            Kernel::SpectralMixture { q } => {
+                let mut t = vec![inv_softplus(1.0 / *q as f64); *q];
+                for i in 0..*q {
+                    t.push(inv_softplus(0.5 + 2.0 * i as f64)); // spread freqs
+                }
+                for _ in 0..*q {
+                    t.push(inv_softplus(0.5));
+                }
+                t.push(inv_softplus(noise_init));
+                t
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softplus_roundtrip() {
+        for y in [0.01, 0.3, 1.0, 5.0, 50.0] {
+            assert!((softplus(inv_softplus(y)) - y).abs() < 1e-9, "{y}");
+        }
+    }
+
+    #[test]
+    fn rbf_basics() {
+        let k = Kernel::Rbf { dim: 2 };
+        let theta = k.default_theta(0.1);
+        assert_eq!(theta.len(), 4);
+        let x = [0.1, -0.2];
+        let kxx = k.eval(&theta, &x, &x);
+        assert!((kxx - (softplus(theta[2]) + 1e-6)).abs() < 1e-12);
+        // decays with distance
+        let near = k.eval(&theta, &x, &[0.15, -0.2]);
+        let far = k.eval(&theta, &x, &[0.9, 0.9]);
+        assert!(near > far);
+        assert!(far >= 0.0);
+    }
+
+    #[test]
+    fn matern_rougher_than_rbf_nearby() {
+        let kr = Kernel::Rbf { dim: 1 };
+        let km = Kernel::Matern12 { dim: 1 };
+        let theta = kr.default_theta(0.1);
+        let a = [0.0];
+        let b = [0.05];
+        // matern-1/2 drops faster at short range
+        assert!(km.eval(&theta, &a, &b) < kr.eval(&theta, &a, &b));
+    }
+
+    #[test]
+    fn sm_kernel_periodicity_signal() {
+        let k = Kernel::SpectralMixture { q: 1 };
+        // w=1, mu=1.0 (freq), v tiny -> nearly cos(2 pi tau)
+        let theta = vec![inv_softplus(1.0), inv_softplus(1.0), inv_softplus(1e-4), 0.0];
+        let k0 = k.eval(&theta, &[0.0], &[0.0]);
+        let k1 = k.eval(&theta, &[0.0], &[1.0]);
+        assert!((k0 - k1).abs() < 0.05, "period-1 correlation should recur");
+    }
+
+    #[test]
+    fn theta_dim_matches_python_convention() {
+        assert_eq!(Kernel::Rbf { dim: 3 }.theta_dim(), 5);
+        assert_eq!(Kernel::SpectralMixture { q: 4 }.theta_dim(), 13);
+        assert_eq!(Kernel::from_kind("sm4", 1).theta_dim(), 13);
+    }
+}

@@ -1,0 +1,26 @@
+//! WISKI — Woodbury Inversion with Structured Kernel Interpolation:
+//! constant-time online Gaussian processes (Stanton, Maddox, Delbridge &
+//! Wilson, AISTATS 2021), as a three-layer Rust + JAX + Pallas system.
+//!
+//! - [`runtime`]: PJRT executor for the AOT HLO artifacts built by
+//!   `python/compile` (jax L2 + Pallas L1; Python never runs at serve time).
+//! - [`gp`]: the WISKI model and the paper's baselines (exact GP, local
+//!   GPs, O-SVGP, O-SGPR) behind one [`gp::OnlineGp`] trait.
+//! - [`coordinator`]: threaded streaming server with observation
+//!   micro-batching.
+//! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
+//!   (the paper's §5.3 / §5.4 applications).
+//! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
+//!   from-scratch substrates (nothing beyond the vendored crates exists
+//!   offline).
+pub mod active;
+pub mod bo;
+pub mod coordinator;
+pub mod data;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;

@@ -1,0 +1,75 @@
+//! Conjugate gradients — the paper's "Exact-PCG" baseline (Gardner et al.
+//! 2018) solves (K + s2 I) x = b by CG with matrix-vector products only,
+//! turning the exact GP's O(n^3) into O(j n^2).
+
+use super::{axpy, dot};
+
+#[derive(Clone, Copy, Debug)]
+pub struct CgOptions {
+    pub max_iters: usize,
+    pub tol: f64,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        Self { max_iters: 256, tol: 1e-8 }
+    }
+}
+
+/// Solve A x = b for SPD A given only a matvec closure. Returns (x, iters).
+pub fn cg_solve(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    opts: CgOptions,
+) -> (Vec<f64>, usize) {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let b_norm = rs.sqrt().max(1e-300);
+    for it in 0..opts.max_iters {
+        if rs.sqrt() / b_norm < opts.tol {
+            return (x, it);
+        }
+        let ap = matvec(&p);
+        let alpha = rs / dot(&p, &ap).max(1e-300);
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    (x, opts.max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Mat};
+    use crate::rng::Rng;
+
+    #[test]
+    fn cg_matches_cholesky() {
+        let n = 24;
+        let mut rng = Rng::new(7);
+        let b_mat = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = dot(b_mat.row(i), b_mat.row(j));
+            }
+            a[(i, i)] += n as f64;
+        }
+        let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (x, iters) = cg_solve(|v| a.matvec(v), &rhs, CgOptions::default());
+        assert!(iters <= n + 1);
+        let x_ref = Cholesky::factor(&a, 0.0).unwrap().solve(&rhs);
+        for (u, v) in x.iter().zip(&x_ref) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+}

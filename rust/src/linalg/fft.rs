@@ -1,0 +1,110 @@
+//! Radix-2 complex FFT (iterative Cooley–Tukey) — substrate for the
+//! Toeplitz matvec (circulant embedding) used by structured K_UU algebra.
+
+use std::f64::consts::PI;
+
+/// In-place FFT of interleaved complex data (re, im). len must be a power
+/// of two. `inverse` applies the conjugate transform *without* the 1/n
+/// normalization (callers of `ifft_inplace` get the normalized version).
+fn fft_core(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    assert_eq!(im.len(), n);
+    // bit reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let (ncr, nci) = (cr * wr - ci * wi, cr * wi + ci * wr);
+                cr = ncr;
+                ci = nci;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward FFT, in place.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    fft_core(re, im, false);
+}
+
+/// Inverse FFT, in place, normalized by 1/n.
+pub fn ifft_inplace(re: &mut [f64], im: &mut [f64]) {
+    fft_core(re, im, true);
+    let n = re.len() as f64;
+    for v in re.iter_mut() {
+        *v /= n;
+    }
+    for v in im.iter_mut() {
+        *v /= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let mut rng = Rng::new(5);
+        let orig: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0; 64];
+        fft_inplace(&mut re, &mut im);
+        ifft_inplace(&mut re, &mut im);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert!(im.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let n = 16;
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut re = x.clone();
+        let mut im = vec![0.0; n];
+        fft_inplace(&mut re, &mut im);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for (t, xt) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                sr += xt * ang.cos();
+                si += xt * ang.sin();
+            }
+            assert!((re[k] - sr).abs() < 1e-10);
+            assert!((im[k] - si).abs() < 1e-10);
+        }
+    }
+}

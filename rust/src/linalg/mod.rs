@@ -1,0 +1,55 @@
+//! Dense linear-algebra substrate.
+//!
+//! Nothing beyond the vendored crate set is available offline (no nalgebra /
+//! ndarray), so the pure-Rust baselines (exact GP, local GPs, O-SGPR) and
+//! all verification paths are built on this module: a row-major `Mat`,
+//! Cholesky factorization with low-rank updates, triangular solves,
+//! conjugate gradients, Lanczos, and an FFT-based Toeplitz matvec.
+
+mod cg;
+mod chol;
+mod fft;
+mod lanczos;
+mod mat;
+mod toeplitz;
+
+pub use cg::{cg_solve, CgOptions};
+pub use chol::Cholesky;
+pub use fft::{fft_inplace, ifft_inplace};
+pub use lanczos::{lanczos, LanczosResult};
+pub use mat::Mat;
+pub use toeplitz::ToeplitzMatvec;
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_norm_axpy() {
+        let a = vec![1.0, 2.0, 2.0];
+        assert_eq!(dot(&a, &a), 9.0);
+        assert_eq!(norm(&a), 3.0);
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 5.0]);
+    }
+}

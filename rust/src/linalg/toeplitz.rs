@@ -1,0 +1,70 @@
+//! Symmetric-Toeplitz matvec via circulant embedding + FFT: O(m log m)
+//! products with K_UU on a regular 1-D lattice (Wilson & Nickisch 2015).
+//! Used by the Rust-side verification of SKI structure exploitation and by
+//! the structured exact-GP cross-checks.
+
+use super::{fft_inplace, ifft_inplace};
+
+/// Precomputed circulant spectrum for fast symmetric-Toeplitz matvecs.
+pub struct ToeplitzMatvec {
+    n: usize,
+    /// FFT length (next pow2 >= 2n-1, padded).
+    len: usize,
+    spec_re: Vec<f64>,
+    spec_im: Vec<f64>,
+}
+
+impl ToeplitzMatvec {
+    /// `col` is the first column of the symmetric Toeplitz matrix.
+    pub fn new(col: &[f64]) -> Self {
+        let n = col.len();
+        let len = (2 * n - 1).next_power_of_two();
+        // circulant embedding: [c_0 .. c_{n-1}, 0.., c_{n-1} .. c_1]
+        let mut re = vec![0.0; len];
+        let mut im = vec![0.0; len];
+        re[..n].copy_from_slice(col);
+        for k in 1..n {
+            re[len - k] = col[k];
+        }
+        fft_inplace(&mut re, &mut im);
+        Self { n, len, spec_re: re, spec_im: im }
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut re = vec![0.0; self.len];
+        let mut im = vec![0.0; self.len];
+        re[..self.n].copy_from_slice(v);
+        fft_inplace(&mut re, &mut im);
+        for i in 0..self.len {
+            let (ar, ai) = (re[i], im[i]);
+            re[i] = ar * self.spec_re[i] - ai * self.spec_im[i];
+            im[i] = ar * self.spec_im[i] + ai * self.spec_re[i];
+        }
+        ifft_inplace(&mut re, &mut im);
+        re.truncate(self.n);
+        re
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_dense_toeplitz() {
+        let n = 33; // deliberately not a power of two
+        let col: Vec<f64> = (0..n).map(|k| (-0.1 * k as f64).exp()).collect();
+        let t = ToeplitzMatvec::new(&col);
+        let dense = Mat::from_fn(n, n, |i, j| col[i.abs_diff(j)]);
+        let mut rng = Rng::new(9);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let fast = t.matvec(&v);
+        let slow = dense.matvec(&v);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+}

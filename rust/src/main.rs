@@ -1,0 +1,90 @@
+//! `wiski` CLI — leader entrypoint for the online-GP service.
+//!
+//! Subcommands (no clap offline; tiny hand-rolled parser):
+//!   info                      list artifacts and their calling conventions
+//!   serve [--stream N]        run the streaming coordinator demo
+//!   check                     compile every artifact and execute a probe
+use std::sync::Arc;
+
+use anyhow::Result;
+use wiski::coordinator::ModelServer;
+use wiski::data::Projection;
+use wiski::gp::{Wiski, WiskiConfig};
+use wiski::rng::Rng;
+use wiski::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let cmd = args.get(1).map(String::as_str).unwrap_or("info");
+    let dir = args
+        .iter()
+        .position(|a| a == "--artifacts")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "artifacts".into());
+    match cmd {
+        "info" => info(&dir),
+        "serve" => serve(&dir, &args),
+        "check" => check(&dir),
+        other => {
+            eprintln!("unknown command {other}; try: info | serve | check");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(dir: &str) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    let mut names: Vec<&str> = rt.manifest().names().collect();
+    names.sort_unstable();
+    println!("{} artifacts in {dir}/", names.len());
+    for n in names {
+        let s = rt.spec(n)?;
+        println!("  {n}  ({} in, {} out)", s.inputs.len(), s.outputs.len());
+    }
+    Ok(())
+}
+
+fn serve(dir: &str, args: &[String]) -> Result<()> {
+    let n: usize = args
+        .iter()
+        .position(|a| a == "--stream")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let rt = Arc::new(Runtime::new(dir)?);
+    let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
+    let server = ModelServer::spawn(model, 8);
+    let h = server.handle();
+    let mut rng = Rng::new(0);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+        let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+        h.observe(x, y)?;
+    }
+    let stats = h.flush()?;
+    println!(
+        "streamed {} observations in {:.2?} ({:.0}us/batch, {:.1} obs/batch)",
+        stats.observed,
+        t0.elapsed(),
+        stats.mean_observe_us(),
+        stats.observed as f64 / stats.observe_batches.max(1) as f64
+    );
+    let p = h.predict(vec![vec![0.0, 0.0]])?;
+    println!("posterior at origin: {:+.3} +- {:.3}", p[0].mean, p[0].var_y.sqrt());
+    server.shutdown();
+    Ok(())
+}
+
+fn check(dir: &str) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    let mut names: Vec<String> = rt.manifest().names().map(String::from).collect();
+    names.sort_unstable();
+    for n in &names {
+        let t0 = std::time::Instant::now();
+        rt.prepare(n)?;
+        println!("compiled {n} in {:.2?}", t0.elapsed());
+    }
+    println!("all {} artifacts compile", names.len());
+    Ok(())
+}

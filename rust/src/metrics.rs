@@ -1,0 +1,166 @@
+//! Evaluation metrics + lightweight timing stats for the bench harness.
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let n = pred.len().max(1) as f64;
+    (pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+}
+
+/// Mean Gaussian negative log likelihood with per-point predictive variance
+/// (latent variance + observation noise already folded in by the caller).
+pub fn gaussian_nll(mean: &[f64], var: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(mean.len(), target.len());
+    assert_eq!(var.len(), target.len());
+    let n = mean.len().max(1) as f64;
+    mean.iter()
+        .zip(var)
+        .zip(target)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-8);
+            0.5 * ((2.0 * std::f64::consts::PI * v).ln() + (t - m) * (t - m) / v)
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// Classification accuracy from hard labels.
+pub fn accuracy(pred: &[usize], target: &[usize]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let hits = pred.iter().zip(target).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len().max(1) as f64
+}
+
+/// Streaming mean/stddev (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl RunningStats {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Timing aggregator for the hand-rolled bench harness (criterion is not in
+/// the offline vendor set): warmup + timed iterations, p50/p99.
+#[derive(Clone, Debug, Default)]
+pub struct Timings {
+    samples_us: Vec<f64>,
+}
+
+impl Timings {
+    pub fn push(&mut self, dur: std::time::Duration) {
+        self.samples_us.push(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "mean={:.1}us p50={:.1}us p99={:.1}us n={}",
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(99.0),
+            self.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_zero_for_exact() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nll_prefers_confident_correct() {
+        let t = [0.0];
+        let tight = gaussian_nll(&[0.0], &[0.01], &t);
+        let loose = gaussian_nll(&[0.0], &[1.0], &t);
+        let wrong_tight = gaussian_nll(&[2.0], &[0.01], &t);
+        assert!(tight < loose);
+        assert!(wrong_tight > loose);
+    }
+
+    #[test]
+    fn running_stats_match_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let mut st = RunningStats::default();
+        for x in xs {
+            st.push(x);
+        }
+        assert!((st.mean() - 2.5).abs() < 1e-12);
+        assert!((st.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timings_percentiles_ordered() {
+        let mut t = Timings::default();
+        for i in 1..=100 {
+            t.push(std::time::Duration::from_micros(i));
+        }
+        assert!(t.percentile_us(50.0) <= t.percentile_us(99.0));
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Adam optimizer — runs on the Rust side over gradients returned by the
+//! AOT artifacts (the artifacts compute value+grad; the coordinator owns the
+//! parameter state and update rule).
+
+/// Standard Adam with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+
+    /// One descent step on `params` given `grad` (same length).
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            if !g.is_finite() {
+                continue; // skip exploded components; keeps streaming robust
+            }
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut adam = Adam::new(2, 0.1);
+        let mut p = vec![3.0, -2.0];
+        for _ in 0..500 {
+            let g = vec![2.0 * (p[0] - 1.0), 2.0 * (p[1] + 1.0)];
+            adam.step(&mut p, &g);
+        }
+        assert!((p[0] - 1.0).abs() < 1e-3);
+        assert!((p[1] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn skips_nan_grads() {
+        let mut adam = Adam::new(1, 0.1);
+        let mut p = vec![1.0];
+        adam.step(&mut p, &[f64::NAN]);
+        assert_eq!(p[0], 1.0);
+    }
+}

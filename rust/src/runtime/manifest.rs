@@ -1,0 +1,213 @@
+//! Parser for `artifacts/manifest.txt` — the artifact calling conventions.
+//!
+//! Format (emitted by python/compile/aot.py), one stanza per artifact:
+//!
+//! ```text
+//! artifact wiski_step_rbf_d2_g16_r128_q1
+//! file wiski_step_rbf_d2_g16_r128_q1.hlo.txt
+//! meta d=2 g=16 kind=rbf m=256 q=1 r=128
+//! in theta f32 4
+//! in wty f32 256
+//! in C f32 128,128
+//! in yty f32 scalar
+//! out mll f32 scalar
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One input or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    /// Row-major dims; empty for scalars.
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact's calling convention.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub meta: HashMap<String, String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Integer meta field (g, d, r, q, m, b...).
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("artifact {} missing meta {key:?}", self.name))?
+            .parse()
+            .with_context(|| format!("artifact {} meta {key:?} not an int", self.name))
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|io| io.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|io| io.name == name)
+    }
+}
+
+/// All artifact specs, keyed by name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut specs = HashMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let errline = || format!("manifest line {}: {line:?}", lineno + 1);
+            match tag {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: stanza not closed with `end`", errline());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.first().with_context(errline)?.to_string(),
+                        file: String::new(),
+                        meta: HashMap::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "file" => {
+                    cur.as_mut().with_context(errline)?.file =
+                        rest.first().with_context(errline)?.to_string();
+                }
+                "meta" => {
+                    let spec = cur.as_mut().with_context(errline)?;
+                    for kv in &rest {
+                        if let Some((k, v)) = kv.split_once('=') {
+                            spec.meta.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                }
+                "in" | "out" => {
+                    let spec = cur.as_mut().with_context(errline)?;
+                    let name = rest.first().with_context(errline)?.to_string();
+                    // rest[1] is the dtype (always f32 today).
+                    let dims = rest.get(2).with_context(errline)?;
+                    let shape = parse_shape(dims).with_context(errline)?;
+                    let io = IoSpec { name, shape };
+                    if tag == "in" {
+                        spec.inputs.push(io);
+                    } else {
+                        spec.outputs.push(io);
+                    }
+                }
+                "end" => {
+                    let spec = cur.take().with_context(errline)?;
+                    if spec.file.is_empty() {
+                        bail!("{}: artifact {} has no file", errline(), spec.name);
+                    }
+                    specs.insert(spec.name.clone(), spec);
+                }
+                other => bail!("{}: unknown tag {other:?}", errline()),
+            }
+        }
+        if let Some(spec) = cur {
+            bail!("manifest ended mid-stanza for artifact {}", spec.name);
+        }
+        Ok(Self { specs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+fn parse_shape(dims: &str) -> Result<Vec<usize>> {
+    if dims == "scalar" {
+        return Ok(vec![]);
+    }
+    dims.split(',')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact foo
+file foo.hlo.txt
+meta g=16 d=2 kind=rbf
+in theta f32 4
+in yty f32 scalar
+in C f32 128,128
+out mll f32 scalar
+end
+artifact bar
+file bar.hlo.txt
+in x f32 3,2
+out y f32 3
+end
+";
+
+    #[test]
+    fn parses_two_stanzas() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let foo = m.get("foo").unwrap();
+        assert_eq!(foo.file, "foo.hlo.txt");
+        assert_eq!(foo.meta_usize("g").unwrap(), 16);
+        assert_eq!(foo.inputs.len(), 3);
+        assert_eq!(foo.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(foo.inputs[2].shape, vec![128, 128]);
+        assert_eq!(foo.inputs[2].elem_count(), 16384);
+        assert_eq!(foo.outputs[0].name, "mll");
+    }
+
+    #[test]
+    fn rejects_unclosed_stanza() {
+        assert!(Manifest::parse("artifact foo\nfile f.hlo.txt\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Manifest::parse("artifact foo\nbogus x\nend\n").is_err());
+    }
+}

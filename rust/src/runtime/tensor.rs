@@ -1,0 +1,92 @@
+//! Host-side f32 tensor: the only value type crossing the Rust<->PJRT border.
+
+use anyhow::Result;
+
+/// Dense row-major f32 tensor. Scalars have an empty shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec1(v: Vec<f32>) -> Self {
+        let n = v.len();
+        Self { shape: vec![n], data: v }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// 2-D tensor from rows; all rows must share a length.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            debug_assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Self { shape: vec![r, c], data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// First element (the idiom for scalar outputs).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// Convert to an xla Literal with the manifest-declared shape.
+    ///
+    /// The manifest shape wins over `self.shape` (callers may pass flat
+    /// buffers); element counts were validated by the runtime.
+    pub(crate) fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if shape.is_empty() {
+            // rank-0: reshape to scalar
+            return lit
+                .reshape(&[])
+                .map_err(|e| anyhow::anyhow!("xla reshape scalar: {e:?}"));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("xla reshape {shape:?}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_layout_is_row_major() {
+        let t = Tensor::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_has_empty_shape() {
+        let t = Tensor::scalar(7.0);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.item(), 7.0);
+    }
+}

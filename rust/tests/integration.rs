@@ -1,0 +1,253 @@
+//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
+//! the WISKI/O-SVGP models + coordinator.  Requires `make artifacts` to
+//! have been run (skips with a message otherwise, so `cargo test` stays
+//! green on a fresh checkout).
+
+use std::sync::Arc;
+
+use wiski::coordinator::ModelServer;
+use wiski::data::{self, Projection};
+use wiski::gp::{DirichletClassifier, ExactGp, OnlineGp, OSvgp, SolveMethod, Wiski, WiskiConfig};
+use wiski::kernels::Kernel;
+use wiski::metrics::rmse;
+use wiski::rng::Rng;
+use wiski::runtime::Runtime;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::new(dir).expect("runtime")))
+}
+
+fn default_wiski(rt: &Arc<Runtime>) -> Wiski {
+    Wiski::new(rt.clone(), WiskiConfig::default(), Projection::identity(2)).expect("wiski")
+}
+
+/// 2-D toy surface used across tests.
+fn toy2d(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|_| vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)])
+        .collect();
+    let ys: Vec<f64> = xs
+        .iter()
+        .map(|x| (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal())
+        .collect();
+    (xs, ys)
+}
+
+#[test]
+fn wiski_learns_toy_surface_online() {
+    let Some(rt) = runtime() else { return };
+    let mut model = default_wiski(&rt);
+    let (xs, ys) = toy2d(300, 1);
+    let (test_x, test_y) = toy2d(64, 2);
+    for (x, y) in xs.iter().zip(&ys) {
+        model.observe(x, *y).unwrap();
+    }
+    let preds = model.predict(&test_x).unwrap();
+    let err = rmse(&preds.iter().map(|p| p.mean).collect::<Vec<_>>(), &test_y);
+    assert!(err < 0.25, "rmse={err}");
+    assert_eq!(model.num_observed(), 300);
+    assert!(model.krank() > 32, "krank={}", model.krank());
+    // hyperparameters moved from their init
+    assert!(model.last_mll.is_finite());
+}
+
+#[test]
+fn wiski_matches_exact_gp_posterior_shape() {
+    // With dense data, the SKI posterior mean must track the exact GP's.
+    let Some(rt) = runtime() else { return };
+    let mut wiski = default_wiski(&rt);
+    wiski.cfg.grad_steps = 0; // freeze theta at shared defaults
+    let mut exact = ExactGp::new(Kernel::Rbf { dim: 2 }, SolveMethod::Cholesky, 0.05, 0);
+    exact.theta = wiski.theta.clone();
+    let (xs, ys) = toy2d(150, 3);
+    for (x, y) in xs.iter().zip(&ys) {
+        exact.observe(x, *y).unwrap();
+    }
+    // stream into wiski WITHOUT hyperparameter updates to compare posteriors
+    let mut w2 = Wiski::new(
+        rt.clone(),
+        WiskiConfig { lr: 0.0, ..WiskiConfig::default() },
+        Projection::identity(2),
+    )
+    .unwrap();
+    w2.theta = exact.theta.clone();
+    for (x, y) in xs.iter().zip(&ys) {
+        w2.observe(x, *y).unwrap();
+    }
+    let (qx, _) = toy2d(32, 4);
+    let pw = w2.predict(&qx).unwrap();
+    let pe = exact.predict(&qx).unwrap();
+    let mw: Vec<f64> = pw.iter().map(|p| p.mean).collect();
+    let me: Vec<f64> = pe.iter().map(|p| p.mean).collect();
+    let diff = rmse(&mw, &me);
+    assert!(diff < 0.12, "wiski vs exact mean rmse {diff}");
+    // variances correlate: where exact is uncertain, wiski should be too
+    let top_exact = pe
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.var_f.partial_cmp(&b.1.var_f).unwrap())
+        .unwrap()
+        .0;
+    let min_exact = pe
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.var_f.partial_cmp(&b.1.var_f).unwrap())
+        .unwrap()
+        .0;
+    assert!(pw[top_exact].var_f >= pw[min_exact].var_f);
+}
+
+#[test]
+fn wiski_observe_is_constant_time_in_n() {
+    // The paper's headline: per-step cost must not grow with n (Fig. 2).
+    let Some(rt) = runtime() else { return };
+    let mut model = default_wiski(&rt);
+    let (xs, ys) = toy2d(600, 5);
+    // warm up + fill rank
+    for i in 0..200 {
+        model.observe(&xs[i], ys[i]).unwrap();
+    }
+    let t_early = {
+        let t0 = std::time::Instant::now();
+        for i in 200..300 {
+            model.observe(&xs[i], ys[i]).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let t_late = {
+        let t0 = std::time::Instant::now();
+        for i in 500..600 {
+            model.observe(&xs[i], ys[i]).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    // allow generous jitter; the point is "not growing linearly"
+    assert!(
+        t_late < t_early * 2.0,
+        "late/early = {:.2} (early {t_early:.4}s late {t_late:.4}s)",
+        t_late / t_early
+    );
+}
+
+#[test]
+fn wiski_rank_saturation_kicks_in() {
+    let Some(rt) = runtime() else { return };
+    let cfg = WiskiConfig { r: 32, g: 16, ..WiskiConfig::default() };
+    let mut model = Wiski::new(rt, cfg, Projection::identity(2)).unwrap();
+    let (xs, ys) = toy2d(120, 6);
+    for (x, y) in xs.iter().zip(&ys) {
+        model.observe(x, *y).unwrap();
+    }
+    assert_eq!(model.krank(), 32, "rank should saturate at r");
+    // and the model still predicts finitely
+    let preds = model.predict(&[vec![0.0, 0.0]]).unwrap();
+    assert!(preds[0].mean.is_finite() && preds[0].var_f > 0.0);
+}
+
+#[test]
+fn osvgp_baseline_learns_something() {
+    let Some(rt) = runtime() else { return };
+    // theta rate 0.01: higher rates collapse the lengthscales (the paper's
+    // appendix notes O-SVGP needs careful tuning; see debug_fit sweep)
+    let mut model = OSvgp::new(rt, "rbf", 2, 64, 1e-3, 0.01, Projection::identity(2), 0).unwrap();
+    let (xs, ys) = toy2d(200, 7);
+    let (tx, ty) = toy2d(48, 8);
+    let prior_preds = model.predict(&tx).unwrap();
+    let prior_rmse = rmse(&prior_preds.iter().map(|p| p.mean).collect::<Vec<_>>(), &ty);
+    for (x, y) in xs.iter().zip(&ys) {
+        model.observe(x, *y).unwrap();
+    }
+    let preds = model.predict(&tx).unwrap();
+    let post_rmse = rmse(&preds.iter().map(|p| p.mean).collect::<Vec<_>>(), &ty);
+    assert!(post_rmse < prior_rmse, "post {post_rmse} !< prior {prior_rmse}");
+}
+
+#[test]
+fn dirichlet_classifier_separates_bananas() {
+    let Some(rt) = runtime() else { return };
+    let ds = data::banana(300, 0);
+    let make = || {
+        Wiski::new(
+            rt.clone(),
+            WiskiConfig { lr: 5e-3, ..WiskiConfig::default() },
+            Projection::identity(2),
+        )
+        .unwrap()
+    };
+    let mut clf = DirichletClassifier::new(vec![make(), make()]);
+    let (train, test): (Vec<_>, Vec<_>) = {
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let (te, tr) = idx.split_at(60);
+        (tr.to_vec(), te.to_vec())
+    };
+    for &i in &train {
+        clf.observe(&ds.x[i], ds.y[i] as usize).unwrap();
+    }
+    let test_x: Vec<Vec<f64>> = test.iter().map(|&i| ds.x[i].clone()).collect();
+    let test_y: Vec<usize> = test.iter().map(|&i| ds.y[i] as usize).collect();
+    let pred = clf.predict_class(&test_x).unwrap();
+    let acc = wiski::metrics::accuracy(&pred, &test_y);
+    assert!(acc > 0.75, "accuracy {acc}");
+    // probabilities sum to one
+    let proba = clf.predict_proba(&test_x[..4].to_vec(), 32, 1).unwrap();
+    for p in proba {
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn coordinator_serves_wiski_with_batching() {
+    let Some(rt) = runtime() else { return };
+    let model = default_wiski(&rt);
+    let server = ModelServer::spawn(model, 4);
+    let h = server.handle();
+    let (xs, ys) = toy2d(100, 9);
+    for (x, y) in xs.iter().zip(&ys) {
+        h.observe(x.clone(), *y).unwrap();
+    }
+    let stats = h.flush().unwrap();
+    assert_eq!(stats.observed, 100);
+    let preds = h.predict(vec![vec![0.1, 0.2]]).unwrap();
+    assert!(preds[0].mean.is_finite());
+    server.shutdown();
+}
+
+#[test]
+fn fx_spectral_mixture_variant_runs() {
+    let Some(rt) = runtime() else { return };
+    let cfg = WiskiConfig { kind: "sm4".into(), g: 128, d: 1, r: 64, lr: 5e-3, grad_steps: 1, learn_noise: true };
+    let mut model = Wiski::new(rt, cfg, Projection::identity(1)).unwrap();
+    let ds = data::fx_series(40, 0);
+    for i in 0..30 {
+        model.observe(&ds.x[i], ds.y[i]).unwrap();
+    }
+    let preds = model.predict(&ds.x[30..].to_vec()).unwrap();
+    assert!(preds.iter().all(|p| p.mean.is_finite() && p.var_f > 0.0));
+}
+
+#[test]
+fn manifest_covers_all_experiment_variants() {
+    let Some(rt) = runtime() else { return };
+    let need = [
+        "wiski_step_rbf_d2_g16_r128_q1",
+        "wiski_predict_rbf_d2_g16_r128_b256",
+        "wiski_mll_rbf_d2_g16_r128",
+        "wiski_step_rbf_d2_g40_r256_q1",
+        "wiski_step_sm4_d1_g128_r64_q1",
+        "wiski_step_rbf_d3_g10_r256_q3",
+        "wiski_step_matern12_d2_g30_r256_q6",
+        "osvgp_step_rbf_d2_m256_q1",
+        "osvgp_step_sm4_d1_m32_q1",
+        "osvgp_step_rbf_d3_m512_q3",
+        "osvgp_step_matern12_d2_m400_q6",
+    ];
+    for name in need {
+        assert!(rt.manifest().get(name).is_some(), "missing artifact {name}");
+    }
+}
