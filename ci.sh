@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 smoke gate: format, build, test, and bench-harness listing.
+# This is the documented entrypoint CI (and humans) run before merging.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt --check == (skipped: rustfmt component not installed)"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench -- --list =="
+cargo bench -- --list
+
+echo "ci.sh: all gates passed"

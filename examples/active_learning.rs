@@ -9,10 +9,10 @@
 use std::sync::Arc;
 
 use wiski::active::{integrated_variance, select_nipv, select_random};
+use wiski::backend::{default_backend, Executor};
 use wiski::data::{self, Projection};
 use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
 use wiski::metrics::rmse;
-use wiski::runtime::Runtime;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -22,7 +22,7 @@ fn arg(name: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
-fn make_model(rt: &Arc<Runtime>) -> anyhow::Result<Wiski> {
+fn make_model(rt: &Arc<dyn Executor>) -> anyhow::Result<Wiski> {
     Wiski::new(
         rt.clone(),
         WiskiConfig {
@@ -41,7 +41,7 @@ fn make_model(rt: &Arc<Runtime>) -> anyhow::Result<Wiski> {
 fn main() -> anyhow::Result<()> {
     let rounds: usize = arg("--rounds", "20").parse()?;
     let q = 6;
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
 
     let field = data::malaria_field(3000, 0);
     let (train_x, train_y) = (&field.x[..2000], &field.y[..2000]);

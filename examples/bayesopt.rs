@@ -7,12 +7,10 @@
 //! cargo run --release --example bayesopt -- --fn levy --steps 60
 //! ```
 
-use std::sync::Arc;
-
+use wiski::backend::default_backend;
 use wiski::bo::{run_bo, testfn_by_name};
 use wiski::data::Projection;
 use wiski::gp::{Wiski, WiskiConfig};
-use wiski::runtime::Runtime;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -28,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let noise_sd: f64 = arg("--noise", "10.0").parse()?;
     let f = testfn_by_name(&fname).expect("unknown test function");
 
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
     let cfg = WiskiConfig {
         kind: "rbf".into(),
         g: 10,

@@ -6,12 +6,10 @@
 //! cargo run --release --example classification -- --dataset banana
 //! ```
 
-use std::sync::Arc;
-
+use wiski::backend::default_backend;
 use wiski::data::{self, Projection};
 use wiski::gp::{DirichletClassifier, Wiski, WiskiConfig};
 use wiski::metrics::accuracy;
-use wiski::runtime::Runtime;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -23,7 +21,7 @@ fn arg(name: &str, default: &str) -> String {
 
 fn main() -> anyhow::Result<()> {
     let dataset = arg("--dataset", "banana");
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
 
     let (ds, proj) = match dataset.as_str() {
         "banana" => (data::banana(400, 0), Projection::identity(2)),

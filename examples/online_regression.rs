@@ -1,8 +1,8 @@
 //! End-to-end driver (the repo's flagship validation run): online
 //! regression on a UCI-scale synthetic stream, comparing WISKI against the
 //! exact-GP and O-SVGP baselines through the full coordinator stack —
-//! dataset -> streaming server (micro-batching router) -> model -> PJRT
-//! artifacts -> metrics.  Reproduces the *shape* of the paper's Figure 2:
+//! dataset -> streaming server (micro-batching router) -> model -> backend
+//! (native math, or PJRT artifacts with `--features pjrt`) -> metrics.  Reproduces the *shape* of the paper's Figure 2:
 //! WISKI per-step time stays flat while exact-GP time grows, at matching
 //! accuracy.  Results land in EXPERIMENTS.md.
 //!
@@ -10,14 +10,12 @@
 //! cargo run --release --example online_regression [--dataset powerplant] [--stream 2000]
 //! ```
 
-use std::sync::Arc;
-
+use wiski::backend::default_backend;
 use wiski::coordinator::ModelServer;
 use wiski::data::{self, Projection};
 use wiski::gp::{ExactGp, OnlineGp, OSvgp, SolveMethod, Wiski, WiskiConfig};
 use wiski::kernels::Kernel;
 use wiski::metrics::{gaussian_nll, rmse};
-use wiski::runtime::Runtime;
 
 fn arg(name: &str, default: &str) -> String {
     let args: Vec<String> = std::env::args().collect();
@@ -45,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         test.len()
     );
 
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
     let proj = if spec.dim <= 2 {
         Projection::identity(spec.dim)
     } else {

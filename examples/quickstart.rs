@@ -1,19 +1,20 @@
 //! Quickstart: stream observations into a WISKI model and predict.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Runs on the native backend by default (no artifacts needed); set
+//! `WISKI_BACKEND=pjrt` after `make artifacts` for the AOT path.
 
-use std::sync::Arc;
-
+use wiski::backend::default_backend;
 use wiski::data::Projection;
 use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
 use wiski::rng::Rng;
-use wiski::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Open the AOT artifacts (built once by `make artifacts`).
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    // 1. Pick an execution backend (pure-Rust native by default).
+    let rt = default_backend("artifacts")?;
 
     // 2. A WISKI model: 16x16 inducing lattice (m=256), root rank 128,
     //    RBF-ARD kernel, one hyperparameter gradient step per observation.

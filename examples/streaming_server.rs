@@ -6,16 +6,14 @@
 //! cargo run --release --example streaming_server
 //! ```
 
-use std::sync::Arc;
-
+use wiski::backend::default_backend;
 use wiski::coordinator::ModelServer;
 use wiski::data::Projection;
 use wiski::gp::{Wiski, WiskiConfig};
 use wiski::rng::Rng;
-use wiski::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
     let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
     // batch up to 8 queued observations into one artifact call
     let server = ModelServer::spawn(model, 8);

@@ -14,6 +14,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use wiski::backend::{default_backend, Executor};
 use wiski::bo::{run_bo, testfn_by_name};
 use wiski::data::{self, Projection};
 use wiski::gp::{
@@ -22,9 +23,8 @@ use wiski::gp::{
 };
 use wiski::kernels::Kernel;
 use wiski::metrics::{accuracy, gaussian_nll, rmse, RunningStats};
-use wiski::runtime::Runtime;
 
-type BenchFn = fn(&Arc<Runtime>);
+type BenchFn = fn(&Arc<dyn Executor>);
 
 const SECTIONS: &[(&str, &str, BenchFn)] = &[
     ("fig1", "FX time series, SM kernel: WISKI vs O-SVGP vs O-SGPR", fig1),
@@ -48,7 +48,8 @@ fn main() {
         }
         return;
     }
-    let rt = Arc::new(Runtime::new("artifacts").expect("run `make artifacts` first"));
+    let rt = default_backend("artifacts").expect("backend construction");
+    println!("backend: {}", rt.backend_name());
     let filter: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
     let t0 = Instant::now();
     for (name, desc, f) in SECTIONS {
@@ -65,7 +66,7 @@ fn main() {
 
 // ---------------------------------------------------------------- helpers --
 
-fn wiski_default(rt: &Arc<Runtime>) -> Wiski {
+fn wiski_default(rt: &Arc<dyn Executor>) -> Wiski {
     Wiski::new(rt.clone(), WiskiConfig::default(), Projection::identity(2)).unwrap()
 }
 
@@ -103,7 +104,7 @@ fn stream_online<M: OnlineGp>(
 
 // ------------------------------------------------------------------- fig1 --
 
-fn fig1(rt: &Arc<Runtime>) {
+fn fig1(rt: &Arc<dyn Executor>) {
     // N=40 series; batch-pretrain on first 10, stream the rest; snapshots at
     // n = 20, 30, 40 for time-ordered and shuffled orders (paper Fig. 1).
     let ds = data::fx_series(40, 0);
@@ -144,7 +145,7 @@ fn fig1(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------- fig2 --
 
-fn fig2(rt: &Arc<Runtime>) {
+fn fig2(rt: &Arc<dyn Executor>) {
     let spec = data::spec_by_name("powerplant").unwrap();
     let mut ds = data::uci_like(spec, 0);
     ds.standardize();
@@ -194,7 +195,7 @@ fn fig2(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------- fig3 --
 
-fn fig3(rt: &Arc<Runtime>) {
+fn fig3(rt: &Arc<dyn Executor>) {
     println!("dataset      model    final-rmse  final-nll   us/step");
     for spec in &data::UCI_SPECS {
         let mut ds = data::uci_like(spec, 1);
@@ -262,7 +263,7 @@ fn fig3(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------- fig4 --
 
-fn fig4(rt: &Arc<Runtime>) {
+fn fig4(rt: &Arc<dyn Executor>) {
     println!("dataset    n-seen   acc(WISKI-GPD)");
     for (name, ds, proj) in [
         ("banana", data::banana(400, 0), Projection::identity(2)),
@@ -289,7 +290,7 @@ fn fig4(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------ fig5a --
 
-fn fig5a(rt: &Arc<Runtime>) {
+fn fig5a(rt: &Arc<dyn Executor>) {
     // reduced-iteration BO (full 1500-step runs live in examples/bayesopt.rs)
     for fname in ["levy", "ackley"] {
         let f = testfn_by_name(fname).unwrap();
@@ -318,7 +319,7 @@ fn fig5a(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------ fig5b --
 
-fn fig5b(rt: &Arc<Runtime>) {
+fn fig5b(rt: &Arc<dyn Executor>) {
     use wiski::active::{integrated_variance, select_random};
     let field = data::malaria_field(1500, 0);
     let (train_x, train_y) = (&field.x[..1000], &field.y[..1000]);
@@ -378,7 +379,7 @@ fn fig5b(rt: &Arc<Runtime>) {
 
 // ------------------------------------------------------------------ table1 --
 
-fn table1(rt: &Arc<Runtime>) {
+fn table1(rt: &Arc<dyn Executor>) {
     let spec = data::spec_by_name("skillcraft").unwrap();
     let mut ds = data::uci_like(spec, 2);
     ds.standardize();
@@ -409,7 +410,7 @@ fn table1(rt: &Arc<Runtime>) {
 
 // -------------------------------------------------------------- ablation_m --
 
-fn ablation_m(rt: &Arc<Runtime>) {
+fn ablation_m(rt: &Arc<dyn Executor>) {
     let spec = data::spec_by_name("powerplant").unwrap();
     let mut ds = data::uci_like(spec, 3);
     ds.standardize();
@@ -447,7 +448,7 @@ fn ablation_m(rt: &Arc<Runtime>) {
 
 // ----------------------------------------------------------- ablation_beta --
 
-fn ablation_beta(rt: &Arc<Runtime>) {
+fn ablation_beta(rt: &Arc<dyn Executor>) {
     let spec = data::spec_by_name("powerplant").unwrap();
     let mut ds = data::uci_like(spec, 4);
     ds.standardize();
@@ -471,7 +472,7 @@ fn ablation_beta(rt: &Arc<Runtime>) {
 
 // ---------------------------------------------------------- ablation_steps --
 
-fn ablation_steps(rt: &Arc<Runtime>) {
+fn ablation_steps(rt: &Arc<dyn Executor>) {
     let spec = data::spec_by_name("powerplant").unwrap();
     let mut ds = data::uci_like(spec, 5);
     ds.standardize();
@@ -494,7 +495,7 @@ fn ablation_steps(rt: &Arc<Runtime>) {
 
 // -------------------------------------------------------------------- perf --
 
-fn perf(rt: &Arc<Runtime>) {
+fn perf(rt: &Arc<dyn Executor>) {
     use wiski::metrics::Timings;
     println!("op                                mean        p50        p99");
     // WISKI observe/predict across variants

@@ -1,0 +1,110 @@
+//! Execution backends: one trait, two engines.
+//!
+//! Every model in [`crate::gp`] drives its numerics through named artifact
+//! calls — `wiski_step_*`, `wiski_predict_*`, `wiski_mll_*`, `osvgp_*` —
+//! with `Tensor`-in / `Tensor`-out calling conventions described by a
+//! [`Manifest`].  [`Executor`] abstracts who actually runs them:
+//!
+//! - [`NativeBackend`] (default): pure-Rust implementations of every
+//!   artifact family on the [`crate::linalg`] substrate.  No artifacts
+//!   directory, no Python, no PJRT — the whole system runs offline.  The
+//!   manifest is synthesized from a variant registry mirroring
+//!   `python/compile/aot.py:build_registry`.
+//! - `crate::runtime::Runtime` (`--features pjrt`): the original AOT
+//!   HLO-artifact runner over the PJRT CPU client.  Requires `make
+//!   artifacts` and a real `xla` crate (the vendored one is a stub).
+//!
+//! Models hold an `Arc<dyn Executor>`, so swapping engines is a
+//! construction-time choice (`--backend` on the CLI, [`default_backend`]
+//! in library code) and never touches the hot path.
+
+pub mod native;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArtifactSpec, Manifest, Tensor};
+
+pub use native::NativeBackend;
+
+/// Name -> tensors-in/tensors-out execution over a manifest of artifact
+/// calling conventions. Implementations must be thread-safe: the
+/// coordinator shares one executor across model worker threads.
+pub trait Executor: Send + Sync {
+    /// Short engine identifier ("native", "pjrt") for logs and CLI output.
+    fn backend_name(&self) -> &'static str;
+
+    /// The artifact calling conventions this executor can run.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute artifact `name`; inputs are validated against the manifest.
+    fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Warm any per-artifact caches (PJRT compiles here; native is a no-op
+    /// beyond the existence check).
+    fn prepare(&self, name: &str) -> Result<()> {
+        self.spec(name).map(|_| ())
+    }
+
+    /// The spec for `name`, or an error listing what exists.
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest().get(name).ok_or_else(|| {
+            let mut known: Vec<_> = self.manifest().names().collect();
+            known.sort_unstable();
+            anyhow!("unknown artifact {name:?}; known: {known:?}")
+        })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Executor for crate::runtime::Runtime {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        crate::runtime::Runtime::manifest(self)
+    }
+
+    fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        crate::runtime::Runtime::exec(self, name, inputs)
+    }
+
+    // `spec` keeps the trait default (manifest lookup — identical logic);
+    // `prepare` is overridden because PJRT actually compiles here.
+    fn prepare(&self, name: &str) -> Result<()> {
+        crate::runtime::Runtime::prepare(self, name)
+    }
+}
+
+/// Backend selection for binaries/examples: the native backend unless the
+/// `WISKI_BACKEND=pjrt` environment variable (or an explicit caller choice)
+/// asks for the artifact runner.
+///
+/// `artifacts_dir` is only consulted on the pjrt path.
+pub fn default_backend(artifacts_dir: &str) -> Result<Arc<dyn Executor>> {
+    match std::env::var("WISKI_BACKEND").as_deref() {
+        Ok("pjrt") => backend_by_name("pjrt", artifacts_dir),
+        Ok("native") | Err(_) => backend_by_name("native", artifacts_dir),
+        Ok(other) => Err(anyhow!("unknown WISKI_BACKEND {other:?}; use native|pjrt")),
+    }
+}
+
+/// Construct a backend by name ("native" | "pjrt").
+pub fn backend_by_name(name: &str, artifacts_dir: &str) -> Result<Arc<dyn Executor>> {
+    match name {
+        "native" => Ok(Arc::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Arc::new(crate::runtime::Runtime::new(artifacts_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => {
+            let _ = artifacts_dir;
+            Err(anyhow!(
+                "pjrt backend requested but this build has no `pjrt` feature; \
+                 rebuild with `cargo build --features pjrt` (and a real xla crate)"
+            ))
+        }
+        other => Err(anyhow!("unknown backend {other:?}; use native|pjrt")),
+    }
+}

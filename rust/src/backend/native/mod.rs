@@ -1,0 +1,350 @@
+//! Pure-Rust execution backend: the WISKI / O-SVGP artifact families
+//! implemented directly on the [`crate::linalg`] substrate.
+//!
+//! The PJRT path needs AOT HLO artifacts built by Python at `make
+//! artifacts` time; this backend needs nothing.  It synthesizes a
+//! [`Manifest`] whose entries carry *exactly* the calling conventions
+//! `python/compile/aot.py` would emit (same names, shapes, meta), so the
+//! discovery logic in `Wiski::new` / `OSvgp::new` works unchanged, and
+//! executes each call in f64 on host:
+//!
+//! - `wiski_step_*` / `wiski_predict_*` / `wiski_mll_*`: the paper's O(1)
+//!   online updates — cubic-interpolation rows, the U C U^T rank-r
+//!   factorization of W^T W, the Q-system MLL/predict identities, and
+//!   analytic theta gradients (see [`wiski`] module docs for the algebra).
+//! - `osvgp_step_*` / `osvgp_predict_*` / `osvgp_qfactor_*`: the streaming
+//!   variational baseline's generalized ELBO, with analytic (q_mu, q_raw)
+//!   gradients and finite-difference theta gradients.
+//!
+//! The default registry mirrors `aot.py:build_registry` one-for-one, plus
+//! a few native-only variants that AOT compile times made impractical
+//! (larger step batches `q=8` for the default grids, and a 1-D RBF family
+//! used by the parity suite).
+
+mod osvgp;
+mod wiski;
+
+use anyhow::{bail, Result};
+
+use crate::backend::Executor;
+use crate::kernels::Kernel;
+use crate::runtime::{ArtifactSpec, IoSpec, Manifest, Tensor};
+
+/// Pure-Rust executor over a synthesized manifest (see module docs).
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    /// The full default variant registry (mirror of aot.py:build_registry,
+    /// plus the native-only q=8 and 1-D parity variants).
+    pub fn new() -> Self {
+        let mut be = Self::empty();
+        // UCI regression default (figs 2, 3, 4 classification, ablations).
+        be.add_wiski_family("rbf", 2, 16, 256, 1, 256, true);
+        be.add_wiski_family("rbf", 2, 16, 128, 1, 256, true);
+        // native-only: larger step batches so the coordinator's micro-batches
+        // fold in one call (AOT would need a recompile per q)
+        be.add_wiski_step_variant("rbf", 2, 16, 256, 8);
+        be.add_wiski_step_variant("rbf", 2, 16, 128, 8);
+        // 3DRoad-like large grid (fig 3, largest dataset; d=2 native)
+        be.add_wiski_family("rbf", 2, 40, 256, 1, 256, false);
+        // FX time series with spectral mixture kernel (fig 1)
+        be.add_wiski_family("sm4", 1, 128, 64, 1, 64, true);
+        // Bayesian optimization, noisy 3-D test functions (fig 5a, A.6-A.8)
+        be.add_wiski_family("rbf", 3, 10, 256, 3, 512, true);
+        // Malaria active learning (fig 5b,c)
+        be.add_wiski_family("matern12", 2, 30, 256, 6, 512, true);
+        // Table 1 rank ablation at m=256 (r=128, r=256 already above)
+        for r in [32, 64, 192] {
+            be.add_wiski_family("rbf", 2, 16, r, 1, 256, false);
+        }
+        // Table 1 rank ablation at m=1024
+        for r in [256, 512] {
+            be.add_wiski_family("rbf", 2, 32, r, 1, 256, false);
+        }
+        // Figure A.4 m-ablation small end (m=64)
+        be.add_wiski_family("rbf", 2, 8, 64, 1, 256, false);
+        // native-only: 1-D family for the WISKI-vs-exact parity suite
+        be.add_wiski_family("rbf", 1, 32, 32, 1, 64, true);
+
+        // O-SVGP baselines
+        be.add_osvgp_family("rbf", 2, 256, 1, 256); // UCI + classification
+        be.add_osvgp_family("sm4", 1, 32, 1, 64); // FX (fig 1)
+        be.add_osvgp_family("rbf", 3, 512, 3, 512); // BO
+        be.add_osvgp_family("matern12", 2, 400, 6, 512); // malaria
+        be.add_osvgp_family("rbf", 2, 64, 1, 256); // m-ablation small end
+        be
+    }
+
+    /// No variants registered; use the `add_*` methods to build a custom
+    /// registry (tests register small grids this way).
+    pub fn empty() -> Self {
+        Self { manifest: Manifest::default() }
+    }
+
+    /// Register a full WISKI family: step (batch `q`), predict (batch `b`),
+    /// and optionally the refit-channel mll artifact.
+    pub fn add_wiski_family(
+        &mut self,
+        kind: &str,
+        d: usize,
+        g: usize,
+        r: usize,
+        q: usize,
+        b: usize,
+        with_mll: bool,
+    ) {
+        self.add_wiski_step_variant(kind, d, g, r, q);
+        let m = g.pow(d as u32);
+        let td = Kernel::from_kind(kind, d).theta_dim();
+        let pred_name = format!("wiski_predict_{kind}_d{d}_g{g}_r{r}_b{b}");
+        let mut inputs = vec![IoSpec { name: "theta".into(), shape: vec![td] }];
+        inputs.extend(wiski_cache_iospecs(m, r));
+        inputs.push(IoSpec { name: "xstar".into(), shape: vec![b, d] });
+        self.manifest.insert(ArtifactSpec {
+            name: pred_name.clone(),
+            file: "<native>".into(),
+            meta: meta_kv(&[
+                ("kind", kind.to_string()),
+                ("d", d.to_string()),
+                ("g", g.to_string()),
+                ("r", r.to_string()),
+                ("b", b.to_string()),
+                ("m", m.to_string()),
+            ]),
+            inputs,
+            outputs: vec![
+                IoSpec { name: "mean".into(), shape: vec![b] },
+                IoSpec { name: "var".into(), shape: vec![b] },
+                IoSpec { name: "sig2".into(), shape: vec![] },
+            ],
+        });
+        if with_mll {
+            let name = format!("wiski_mll_{kind}_d{d}_g{g}_r{r}");
+            let mut inputs = vec![IoSpec { name: "theta".into(), shape: vec![td] }];
+            inputs.extend(wiski_cache_iospecs(m, r));
+            self.manifest.insert(ArtifactSpec {
+                name,
+                file: "<native>".into(),
+                meta: meta_kv(&[
+                    ("kind", kind.to_string()),
+                    ("d", d.to_string()),
+                    ("g", g.to_string()),
+                    ("r", r.to_string()),
+                    ("m", m.to_string()),
+                ]),
+                inputs,
+                outputs: vec![
+                    IoSpec { name: "mll".into(), shape: vec![] },
+                    IoSpec { name: "grad_theta".into(), shape: vec![td] },
+                ],
+            });
+        }
+    }
+
+    /// Register only a step variant (extra batch sizes for one grid).
+    pub fn add_wiski_step_variant(&mut self, kind: &str, d: usize, g: usize, r: usize, q: usize) {
+        let m = g.pow(d as u32);
+        let td = Kernel::from_kind(kind, d).theta_dim();
+        let name = format!("wiski_step_{kind}_d{d}_g{g}_r{r}_q{q}");
+        let mut inputs = vec![IoSpec { name: "theta".into(), shape: vec![td] }];
+        inputs.extend(wiski_cache_iospecs(m, r));
+        inputs.push(IoSpec { name: "x".into(), shape: vec![q, d] });
+        inputs.push(IoSpec { name: "y".into(), shape: vec![q] });
+        inputs.push(IoSpec { name: "s".into(), shape: vec![q] });
+        inputs.push(IoSpec { name: "mask".into(), shape: vec![q] });
+        let mut outputs = wiski_cache_iospecs(m, r);
+        for io in outputs.iter_mut() {
+            io.name = format!("{}_out", io.name);
+        }
+        outputs.push(IoSpec { name: "mll".into(), shape: vec![] });
+        outputs.push(IoSpec { name: "grad_theta".into(), shape: vec![td] });
+        self.manifest.insert(ArtifactSpec {
+            name,
+            file: "<native>".into(),
+            meta: meta_kv(&[
+                ("kind", kind.to_string()),
+                ("d", d.to_string()),
+                ("g", g.to_string()),
+                ("r", r.to_string()),
+                ("q", q.to_string()),
+                ("m", m.to_string()),
+            ]),
+            inputs,
+            outputs,
+        });
+    }
+
+    /// Register an O-SVGP family: step, predict, and the qfactor helper.
+    pub fn add_osvgp_family(&mut self, kind: &str, d: usize, m: usize, q: usize, b: usize) {
+        let td = Kernel::from_kind(kind, d).theta_dim();
+        let step_name = format!("osvgp_step_{kind}_d{d}_m{m}_q{q}");
+        self.manifest.insert(ArtifactSpec {
+            name: step_name,
+            file: "<native>".into(),
+            meta: meta_kv(&[
+                ("kind", kind.to_string()),
+                ("m", m.to_string()),
+                ("d", d.to_string()),
+                ("q", q.to_string()),
+            ]),
+            inputs: vec![
+                IoSpec { name: "q_mu".into(), shape: vec![m] },
+                IoSpec { name: "q_raw".into(), shape: vec![m, m] },
+                IoSpec { name: "theta".into(), shape: vec![td] },
+                IoSpec { name: "z".into(), shape: vec![m, d] },
+                IoSpec { name: "theta_old".into(), shape: vec![td] },
+                IoSpec { name: "old_mu".into(), shape: vec![m] },
+                IoSpec { name: "old_l".into(), shape: vec![m, m] },
+                IoSpec { name: "x".into(), shape: vec![q, d] },
+                IoSpec { name: "y".into(), shape: vec![q] },
+                IoSpec { name: "mask".into(), shape: vec![q] },
+                IoSpec { name: "beta".into(), shape: vec![] },
+            ],
+            outputs: vec![
+                IoSpec { name: "loss".into(), shape: vec![] },
+                IoSpec { name: "g_q_mu".into(), shape: vec![m] },
+                IoSpec { name: "g_q_raw".into(), shape: vec![m, m] },
+                IoSpec { name: "g_theta".into(), shape: vec![td] },
+            ],
+        });
+        let pred_name = format!("osvgp_predict_{kind}_d{d}_m{m}_b{b}");
+        self.manifest.insert(ArtifactSpec {
+            name: pred_name,
+            file: "<native>".into(),
+            meta: meta_kv(&[
+                ("kind", kind.to_string()),
+                ("m", m.to_string()),
+                ("d", d.to_string()),
+                ("b", b.to_string()),
+            ]),
+            inputs: vec![
+                IoSpec { name: "q_mu".into(), shape: vec![m] },
+                IoSpec { name: "q_raw".into(), shape: vec![m, m] },
+                IoSpec { name: "theta".into(), shape: vec![td] },
+                IoSpec { name: "z".into(), shape: vec![m, d] },
+                IoSpec { name: "xstar".into(), shape: vec![b, d] },
+            ],
+            outputs: vec![
+                IoSpec { name: "mean".into(), shape: vec![b] },
+                IoSpec { name: "var".into(), shape: vec![b] },
+                IoSpec { name: "sig2".into(), shape: vec![] },
+            ],
+        });
+        self.manifest.insert(ArtifactSpec {
+            name: format!("osvgp_qfactor_m{m}"),
+            file: "<native>".into(),
+            meta: meta_kv(&[("m", m.to_string())]),
+            inputs: vec![IoSpec { name: "q_raw".into(), shape: vec![m, m] }],
+            outputs: vec![IoSpec { name: "l_q".into(), shape: vec![m, m] }],
+        });
+    }
+}
+
+fn wiski_cache_iospecs(m: usize, r: usize) -> Vec<IoSpec> {
+    vec![
+        IoSpec { name: "wty".into(), shape: vec![m] },
+        IoSpec { name: "yty".into(), shape: vec![] },
+        IoSpec { name: "n".into(), shape: vec![] },
+        IoSpec { name: "U".into(), shape: vec![m, r] },
+        IoSpec { name: "C".into(), shape: vec![r, r] },
+        IoSpec { name: "krank".into(), shape: vec![] },
+    ]
+}
+
+fn meta_kv(pairs: &[(&str, String)]) -> std::collections::HashMap<String, String> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+impl Executor for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?;
+        spec.validate_inputs(inputs)?;
+        if name.starts_with("wiski_step_") {
+            wiski::step(spec, inputs)
+        } else if name.starts_with("wiski_predict_") {
+            wiski::predict(spec, inputs)
+        } else if name.starts_with("wiski_mll_") {
+            wiski::mll(spec, inputs)
+        } else if name.starts_with("osvgp_step_") {
+            osvgp::step(spec, inputs)
+        } else if name.starts_with("osvgp_predict_") {
+            osvgp::predict(spec, inputs)
+        } else if name.starts_with("osvgp_qfactor_") {
+            osvgp::qfactor(spec, inputs)
+        } else {
+            bail!("native backend has no implementation for artifact {name:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_covers_all_experiment_variants() {
+        let be = NativeBackend::new();
+        for name in [
+            "wiski_step_rbf_d2_g16_r128_q1",
+            "wiski_predict_rbf_d2_g16_r128_b256",
+            "wiski_mll_rbf_d2_g16_r128",
+            "wiski_step_rbf_d2_g16_r256_q8",
+            "wiski_step_rbf_d2_g40_r256_q1",
+            "wiski_step_sm4_d1_g128_r64_q1",
+            "wiski_step_rbf_d3_g10_r256_q3",
+            "wiski_step_matern12_d2_g30_r256_q6",
+            "osvgp_step_rbf_d2_m256_q1",
+            "osvgp_step_sm4_d1_m32_q1",
+            "osvgp_step_rbf_d3_m512_q3",
+            "osvgp_step_matern12_d2_m400_q6",
+            "osvgp_qfactor_m256",
+        ] {
+            assert!(be.manifest().get(name).is_some(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn synthesized_step_spec_matches_aot_convention() {
+        let be = NativeBackend::new();
+        let spec = be.manifest().get("wiski_step_rbf_d2_g16_r128_q1").unwrap();
+        assert_eq!(spec.meta_usize("m").unwrap(), 256);
+        assert_eq!(spec.meta_usize("r").unwrap(), 128);
+        let names: Vec<&str> = spec.inputs.iter().map(|io| io.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["theta", "wty", "yty", "n", "U", "C", "krank", "x", "y", "s", "mask"]
+        );
+        assert_eq!(spec.inputs[0].shape, vec![4]); // rbf d=2: ls0 ls1 os noise
+        assert_eq!(spec.inputs[4].shape, vec![256, 128]); // U
+        assert_eq!(spec.inputs[5].shape, vec![128, 128]); // C
+        assert_eq!(spec.inputs[7].shape, vec![1, 2]); // x [q, d]
+        let out_names: Vec<&str> = spec.outputs.iter().map(|io| io.name.as_str()).collect();
+        assert_eq!(
+            out_names,
+            ["wty_out", "yty_out", "n_out", "U_out", "C_out", "krank_out", "mll", "grad_theta"]
+        );
+    }
+
+    #[test]
+    fn unknown_artifact_is_a_clean_error() {
+        let be = NativeBackend::empty();
+        let err = be.exec("wiski_step_rbf_d2_g9_r9_q1", &[]).unwrap_err();
+        assert!(format!("{err}").contains("unknown artifact"));
+    }
+}

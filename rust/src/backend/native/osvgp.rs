@@ -1,0 +1,455 @@
+//! Native O-SVGP numerics: the streaming generalized-VI objective of
+//! `python/compile/osvgp.py` (Bui et al. 2017 + the paper's Appendix B
+//! beta weighting), with gradients.
+//!
+//!   F = -sum_i mask_i E_q[log N(y_i | f_i, s2)]
+//!       + beta [ KL(q || p_theta) + KL(q || q_old) - KL(q || p_theta_old) ]
+//!
+//! with q(u) = N(q_mu, L L^T), L = tril(q_raw, -1) + diag(softplus(diag)).
+//!
+//! Gradients w.r.t. q_mu and L are analytic (standard Gaussian-KL and
+//! expected-log-likelihood derivatives; the diagonal chains through the
+//! softplus), then mapped to q_raw.  The theta gradient is a central finite
+//! difference of the theta-dependent part (data term + beta KL(q||p_theta);
+//! the old-posterior KLs are constants in theta), matching jax autodiff to
+//! FD accuracy — acceptable because theta moves by Adam on a noisy
+//! streaming objective anyway.
+
+use anyhow::Result;
+
+use crate::kernels::{sigmoid, softplus, Kernel};
+use crate::linalg::{axpy, dot, Cholesky, Mat};
+use crate::runtime::{ArtifactSpec, Tensor};
+
+const LOG_2PI: f64 = 1.8378770664093453;
+/// Mirrors osvgp.py KZZ_JITTER.
+const KZZ_JITTER: f64 = 1e-4;
+const THETA_FD_EPS: f64 = 1e-5;
+
+/// L = tril(q_raw, -1) + diag(softplus(diag(q_raw)) + 1e-6).
+fn q_factor(q_raw: &Mat) -> Mat {
+    let m = q_raw.rows;
+    Mat::from_fn(m, m, |i, j| {
+        if i > j {
+            q_raw[(i, j)]
+        } else if i == j {
+            softplus(q_raw[(i, i)]) + 1e-6
+        } else {
+            0.0
+        }
+    })
+}
+
+fn kmat(kernel: &Kernel, theta: &[f64], a: &[Vec<f64>], b: &[Vec<f64>]) -> Mat {
+    Mat::from_fn(a.len(), b.len(), |i, j| kernel.eval(theta, &a[i], &b[j]))
+}
+
+/// chol(K(theta) + 2 * KZZ_JITTER I): osvgp.py adds KZZ_JITTER when forming
+/// kzz and spd_solve/spd_logdet add it again.
+fn kzz_chol(kernel: &Kernel, theta: &[f64], z: &[Vec<f64>]) -> Cholesky {
+    let mut kzz = kmat(kernel, theta, z, z);
+    let m = z.len();
+    for i in 0..m {
+        kzz[(i, i)] += KZZ_JITTER;
+    }
+    Cholesky::factor_floored(&kzz, KZZ_JITTER)
+}
+
+/// Solve (L_f L_f^T) X = columns of `b` for a factored SPD system.
+fn solve_cols(ch: &Cholesky, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(b.rows, b.cols);
+    let mut col = vec![0.0; b.rows];
+    for j in 0..b.cols {
+        for i in 0..b.rows {
+            col[i] = b[(i, j)];
+        }
+        let sol = ch.solve(&col);
+        for i in 0..b.rows {
+            out[(i, j)] = sol[i];
+        }
+    }
+    out
+}
+
+/// KL( N(q_mu, L L^T) || N(0, K) ) given chol(K); returns (kl, kinv_l)
+/// where kinv_l = K^{-1} L is reused by the gradients.
+fn kl_vs_chol(q_mu: &[f64], l_q: &Mat, chk: &Cholesky) -> (f64, Mat) {
+    let m = q_mu.len();
+    let kinv_l = solve_cols(chk, l_q);
+    let trace: f64 = l_q.data.iter().zip(&kinv_l.data).map(|(a, b)| a * b).sum();
+    let kinv_mu = chk.solve(q_mu);
+    let maha = dot(q_mu, &kinv_mu);
+    let logdet_k = chk.logdet();
+    let logdet_s: f64 = (0..m).map(|i| (l_q[(i, i)].abs() + 1e-30).ln()).sum::<f64>() * 2.0;
+    (0.5 * (trace + maha - (m as f64) + logdet_k - logdet_s), kinv_l)
+}
+
+/// KL( N(q_mu, L L^T) || N(old_mu, old_l old_l^T) ) with old_l lower-tri;
+/// returns (kl, olds_inv_l) where olds_inv_l = (old_l old_l^T)^{-1} L is
+/// reused by the gradients (same pattern as `kl_vs_chol`).
+fn kl_vs_gaussian(
+    q_mu: &[f64],
+    l_q: &Mat,
+    old_mu: &[f64],
+    old_ch: &Cholesky,
+) -> (f64, Mat) {
+    let m = q_mu.len();
+    // tr((old_l old_l^T)^{-1} L L^T) = sum_ij L_ij * ((oldS)^{-1} L)_ij
+    let olds_inv_l = solve_cols(old_ch, l_q);
+    let trace: f64 = l_q.data.iter().zip(&olds_inv_l.data).map(|(a, b)| a * b).sum();
+    let dm: Vec<f64> = q_mu.iter().zip(old_mu).map(|(a, b)| a - b).collect();
+    let dsol = old_ch.solve_lower(&dm);
+    let maha = dot(&dsol, &dsol);
+    let logdet_old: f64 =
+        (0..m).map(|i| (old_ch.l[(i, i)].abs() + 1e-30).ln()).sum::<f64>() * 2.0;
+    let logdet_s: f64 = (0..m).map(|i| (l_q[(i, i)].abs() + 1e-30).ln()).sum::<f64>() * 2.0;
+    (0.5 * (trace + maha - (m as f64) + logdet_old - logdet_s), olds_inv_l)
+}
+
+/// Predictive latent marginals at `x`; returns (mean, var, a_cols) with
+/// a_cols = K^{-1} Kzx kept for the gradients.
+fn marginals(
+    kernel: &Kernel,
+    theta: &[f64],
+    q_mu: &[f64],
+    l_q: &Mat,
+    chk: &Cholesky,
+    z: &[Vec<f64>],
+    x: &[Vec<f64>],
+) -> (Vec<f64>, Vec<f64>, Mat) {
+    let kzx = kmat(kernel, theta, z, x); // m x b
+    let a_cols = solve_cols(chk, &kzx); // m x b
+    let b = x.len();
+    let m = z.len();
+    let mut mean = vec![0.0; b];
+    let mut var = vec![0.0; b];
+    let mut a_i = vec![0.0; m];
+    for i in 0..b {
+        for u in 0..m {
+            a_i[u] = a_cols[(u, i)];
+        }
+        mean[i] = dot(&a_i, q_mu);
+        let nystrom: f64 = (0..m).map(|u| kzx[(u, i)] * a_i[u]).sum();
+        let sa = l_q.matvec_t(&a_i); // L^T a_i
+        let svar = dot(&sa, &sa);
+        let kxx = kernel.diag(theta, &x[i]);
+        var[i] = (kxx - nystrom + svar).max(1e-10);
+    }
+    (mean, var, a_cols)
+}
+
+/// The theta-dependent part of the loss — data term + KL(q || p_theta) —
+/// plus the intermediates the analytic (q_mu, q_raw) gradients reuse.
+struct ThetaPart {
+    data: f64,
+    kl_new: f64,
+    s2: f64,
+    mean: Vec<f64>,
+    a_cols: Mat,
+    chk: Cholesky,
+    kinv_l: Mat,
+}
+
+fn theta_part(
+    kernel: &Kernel,
+    theta: &[f64],
+    q_mu: &[f64],
+    l_q: &Mat,
+    z: &[Vec<f64>],
+    x: &[Vec<f64>],
+    y: &[f64],
+    mask: &[f64],
+) -> ThetaPart {
+    let s2 = kernel.noise_var(theta);
+    let chk = kzz_chol(kernel, theta, z);
+    let (mean, var, a_cols) = marginals(kernel, theta, q_mu, l_q, &chk, z, x);
+    let mut data = 0.0;
+    for i in 0..x.len() {
+        let ell = -0.5 * (LOG_2PI + s2.ln())
+            - 0.5 * ((y[i] - mean[i]) * (y[i] - mean[i]) + var[i]) / s2;
+        data -= mask[i] * ell;
+    }
+    let (kl_new, kinv_l) = kl_vs_chol(q_mu, l_q, &chk);
+    ThetaPart { data, kl_new, s2, mean, a_cols, chk, kinv_l }
+}
+
+fn rows_of(t: &Tensor, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| (0..d).map(|k| t.data[i * d + k] as f64).collect())
+        .collect()
+}
+
+fn f64v(t: &Tensor) -> Vec<f64> {
+    t.to_f64_vec()
+}
+
+fn mat_of(t: &Tensor, rows: usize, cols: usize) -> Mat {
+    Mat { rows, cols, data: t.to_f64_vec() }
+}
+
+fn to_f32_tensor(mat: &Mat) -> Tensor {
+    Tensor::new(
+        vec![mat.rows, mat.cols],
+        mat.data.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// `osvgp_step_*`: loss + gradients w.r.t. (q_mu, q_raw, theta).
+pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let kind = spec.meta.get("kind").map(String::as_str).unwrap_or("rbf");
+    let m = spec.meta_usize("m")?;
+    let d = spec.meta_usize("d")?;
+    let q = spec.meta_usize("q")?;
+    let kernel = Kernel::from_kind(kind, d);
+    let td = kernel.theta_dim();
+
+    let q_mu = f64v(&inputs[0]);
+    let q_raw = mat_of(&inputs[1], m, m);
+    let theta = f64v(&inputs[2]);
+    let z = rows_of(&inputs[3], m, d);
+    let theta_old = f64v(&inputs[4]);
+    let old_mu = f64v(&inputs[5]);
+    let old_l = mat_of(&inputs[6], m, m);
+    let x = rows_of(&inputs[7], q, d);
+    let y = f64v(&inputs[8]);
+    let mask = f64v(&inputs[9]);
+    let beta = inputs[10].item() as f64;
+
+    let l_q = q_factor(&q_raw);
+    let base = theta_part(&kernel, &theta, &q_mu, &l_q, &z, &x, &y, &mask);
+    let old_ch = Cholesky { l: old_l };
+    let (kl_old_q, olds_inv_l) = kl_vs_gaussian(&q_mu, &l_q, &old_mu, &old_ch);
+    let chk_old = kzz_chol(&kernel, &theta_old, &z);
+    let (kl_old_p, kold_inv_l) = kl_vs_chol(&q_mu, &l_q, &chk_old);
+    let loss = base.data + beta * (base.kl_new + kl_old_q - kl_old_p);
+
+    // ---- g_q_mu -------------------------------------------------------
+    let mut g_mu = vec![0.0; m];
+    let mut a_i = vec![0.0; m];
+    for i in 0..q {
+        let vd = -mask[i] * (y[i] - base.mean[i]) / base.s2;
+        if vd != 0.0 {
+            for u in 0..m {
+                a_i[u] = base.a_cols[(u, i)];
+            }
+            axpy(vd, &a_i, &mut g_mu);
+        }
+    }
+    axpy(beta, &base.chk.solve(&q_mu), &mut g_mu);
+    let dm: Vec<f64> = q_mu.iter().zip(&old_mu).map(|(a, b)| a - b).collect();
+    axpy(beta, &old_ch.solve(&dm), &mut g_mu);
+    axpy(-beta, &chk_old.solve(&q_mu), &mut g_mu);
+
+    // ---- g_L then chain to q_raw -------------------------------------
+    let mut g_l = Mat::zeros(m, m);
+    // data term: sum_i (mask_i/s2) a_i (L^T a_i)^T
+    for i in 0..q {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        for u in 0..m {
+            a_i[u] = base.a_cols[(u, i)];
+        }
+        let sa = l_q.matvec_t(&a_i);
+        let coeff = mask[i] / base.s2;
+        for p in 0..m {
+            if a_i[p] != 0.0 {
+                axpy(coeff * a_i[p], &sa, g_l.row_mut(p));
+            }
+        }
+    }
+    // beta * (K^{-1} L + oldS^{-1} L - K_old^{-1} L - diag(1/L_ii))
+    for idx in 0..m * m {
+        g_l.data[idx] +=
+            beta * (base.kinv_l.data[idx] + olds_inv_l.data[idx] - kold_inv_l.data[idx]);
+    }
+    for i in 0..m {
+        g_l[(i, i)] -= beta / l_q[(i, i)];
+    }
+    let g_q_raw = Mat::from_fn(m, m, |i, j| {
+        if i > j {
+            g_l[(i, j)]
+        } else if i == j {
+            g_l[(i, i)] * sigmoid(q_raw[(i, i)])
+        } else {
+            0.0
+        }
+    });
+
+    // ---- g_theta: central FD over the theta-dependent part -----------
+    let mut g_theta = vec![0.0; td];
+    for (j, gt) in g_theta.iter_mut().enumerate() {
+        let mut tp = theta.clone();
+        let mut tm = theta.clone();
+        tp[j] += THETA_FD_EPS;
+        tm[j] -= THETA_FD_EPS;
+        let pp = theta_part(&kernel, &tp, &q_mu, &l_q, &z, &x, &y, &mask);
+        let pm = theta_part(&kernel, &tm, &q_mu, &l_q, &z, &x, &y, &mask);
+        let lp = pp.data + beta * pp.kl_new;
+        let lm = pm.data + beta * pm.kl_new;
+        *gt = (lp - lm) / (2.0 * THETA_FD_EPS);
+    }
+
+    Ok(vec![
+        Tensor::scalar(loss as f32),
+        Tensor::vec1(g_mu.iter().map(|&v| v as f32).collect()),
+        to_f32_tensor(&g_q_raw),
+        Tensor::vec1(g_theta.iter().map(|&v| v as f32).collect()),
+    ])
+}
+
+/// `osvgp_predict_*`: latent marginals + sig2.
+pub(super) fn predict(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let kind = spec.meta.get("kind").map(String::as_str).unwrap_or("rbf");
+    let m = spec.meta_usize("m")?;
+    let d = spec.meta_usize("d")?;
+    let b = spec.meta_usize("b")?;
+    let kernel = Kernel::from_kind(kind, d);
+    let q_mu = f64v(&inputs[0]);
+    let q_raw = mat_of(&inputs[1], m, m);
+    let theta = f64v(&inputs[2]);
+    let z = rows_of(&inputs[3], m, d);
+    let xstar = rows_of(&inputs[4], b, d);
+    let l_q = q_factor(&q_raw);
+    let chk = kzz_chol(&kernel, &theta, &z);
+    let (mean, var, _) = marginals(&kernel, &theta, &q_mu, &l_q, &chk, &z, &xstar);
+    Ok(vec![
+        Tensor::vec1(mean.iter().map(|&v| v as f32).collect()),
+        Tensor::vec1(var.iter().map(|&v| v as f32).collect()),
+        Tensor::scalar(kernel.noise_var(&theta) as f32),
+    ])
+}
+
+/// `osvgp_qfactor_*`: materialize L_q from q_raw.
+pub(super) fn qfactor(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let m = spec.meta_usize("m")?;
+    let q_raw = mat_of(&inputs[0], m, m);
+    Ok(vec![to_f32_tensor(&q_factor(&q_raw))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Executor, NativeBackend};
+    use crate::kernels::inv_softplus;
+    use crate::rng::Rng;
+
+    fn small_backend() -> NativeBackend {
+        let mut be = NativeBackend::empty();
+        be.add_osvgp_family("rbf", 1, 8, 1, 4);
+        be
+    }
+
+    fn base_inputs(m: usize, d: usize, td: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut q_raw = vec![0f32; m * m];
+        for i in 0..m {
+            q_raw[i * m + i] = inv_softplus(1.0) as f32;
+        }
+        let mut old_l = vec![0f32; m * m];
+        for i in 0..m {
+            old_l[i * m + i] = 1.0;
+        }
+        let z: Vec<f32> = (0..m * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let theta: Vec<f32> = Kernel::from_kind("rbf", d)
+            .default_theta(0.2)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        assert_eq!(theta.len(), td);
+        vec![
+            Tensor::zeros(&[m]),                  // q_mu
+            Tensor::new(vec![m, m], q_raw),       // q_raw
+            Tensor::vec1(theta.clone()),          // theta
+            Tensor::new(vec![m, d], z),           // z
+            Tensor::vec1(theta),                  // theta_old
+            Tensor::zeros(&[m]),                  // old_mu
+            Tensor::new(vec![m, m], old_l),       // old_l
+            Tensor::new(vec![1, d], vec![0.3]),   // x
+            Tensor::vec1(vec![0.7]),              // y
+            Tensor::vec1(vec![1.0]),              // mask
+            Tensor::scalar(1e-3),                 // beta
+        ]
+    }
+
+    #[test]
+    fn step_returns_finite_loss_and_grads() {
+        let be = small_backend();
+        let ins = base_inputs(8, 1, 3, 1);
+        let out = be.exec("osvgp_step_rbf_d1_m8_q1", &ins).unwrap();
+        assert!(out[0].item().is_finite());
+        assert!(out[1].data.iter().all(|v| v.is_finite()));
+        assert!(out[2].data.iter().all(|v| v.is_finite()));
+        assert!(out[3].data.iter().all(|v| v.is_finite()));
+        // upper triangle of g_q_raw is structurally zero
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(out[2].data[i * 8 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn q_mu_grad_matches_finite_differences() {
+        let be = small_backend();
+        let ins = base_inputs(8, 1, 3, 2);
+        let out = be.exec("osvgp_step_rbf_d1_m8_q1", &ins).unwrap();
+        let eps = 1e-3f32;
+        for j in [0usize, 3, 7] {
+            let mut plus = ins.clone();
+            let mut minus = ins.clone();
+            plus[0].data[j] += eps;
+            minus[0].data[j] -= eps;
+            let lp = be.exec("osvgp_step_rbf_d1_m8_q1", &plus).unwrap()[0].item() as f64;
+            let lm = be.exec("osvgp_step_rbf_d1_m8_q1", &minus).unwrap()[0].item() as f64;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let g = out[1].data[j] as f64;
+            assert!(
+                (g - fd).abs() < 5e-3 * (1.0 + fd.abs()),
+                "q_mu[{j}]: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn q_raw_grad_matches_finite_differences() {
+        let be = small_backend();
+        let ins = base_inputs(8, 1, 3, 3);
+        let out = be.exec("osvgp_step_rbf_d1_m8_q1", &ins).unwrap();
+        let eps = 1e-3f32;
+        // one diagonal entry (softplus chain) and one strict-lower entry
+        for (i, j) in [(2usize, 2usize), (5, 1)] {
+            let idx = i * 8 + j;
+            let mut plus = ins.clone();
+            let mut minus = ins.clone();
+            plus[1].data[idx] += eps;
+            minus[1].data[idx] -= eps;
+            let lp = be.exec("osvgp_step_rbf_d1_m8_q1", &plus).unwrap()[0].item() as f64;
+            let lm = be.exec("osvgp_step_rbf_d1_m8_q1", &minus).unwrap()[0].item() as f64;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let g = out[2].data[idx] as f64;
+            assert!(
+                (g - fd).abs() < 5e-3 * (1.0 + fd.abs()),
+                "q_raw[{i},{j}]: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn qfactor_applies_softplus_diagonal() {
+        let be = small_backend();
+        let mut q_raw = vec![0f32; 64];
+        for i in 0..8 {
+            q_raw[i * 8 + i] = inv_softplus(1.0) as f32;
+        }
+        q_raw[1 * 8 + 0] = 0.5; // strict lower passes through
+        q_raw[0 * 8 + 1] = 9.0; // upper is dropped
+        let out = be
+            .exec("osvgp_qfactor_m8", &[Tensor::new(vec![8, 8], q_raw)])
+            .unwrap();
+        let l = &out[0];
+        assert!((l.data[0] as f64 - 1.0).abs() < 1e-5); // softplus(raw) ~= 1
+        assert!((l.data[8] as f64 - 0.5).abs() < 1e-6);
+        assert_eq!(l.data[1], 0.0);
+    }
+}

@@ -1,0 +1,511 @@
+//! Native WISKI numerics: step / predict / mll with theta gradients.
+//!
+//! Mirrors `python/compile/model.py` (which defines the artifact semantics)
+//! in f64 on the linalg substrate.  Cache state and identities, with
+//! `S = U_k Ch`, `Ch = chol(C_k + eps_C I)` over the *effective* rank
+//! `k = krank` (columns of U beyond krank are exactly zero, so the full-rank
+//! jax computation and this rank-k one agree — the zero columns contribute
+//! nothing to S, Q, or a):
+//!
+//!   Q    = I_k + S^T K S / s2
+//!   a    = S^T K wty / s2,          b = (Q + eps_Q I)^{-1} a
+//!   MLL  = -(yty - wty^T K wty/s2 + a^T b)/(2 s2)
+//!          - (log|Q + eps_Q I| + n log s2)/2 - n/2 log 2pi
+//!   mean = w*^T K c,                c = (wty - S b)/s2
+//!   var  = w*^T K w* - (S^T K w*)^T (Q + eps_Q I)^{-1} (S^T K w*) / s2
+//!
+//! Theta gradients are analytic for the kernel parameters: writing the MLL
+//! as a function of the lattice covariance K(theta),
+//!
+//!   dMLL = 1/2 c^T dK c - 1/(2 s2) tr((Q + eps_Q I)^{-1} S^T dK S)
+//!
+//! (the first term collects the quadratic pieces — the identity
+//! c = (wty - S b)/s2 makes the three wty/h cross terms a perfect square —
+//! and the second is the standard logdet derivative through the jittered
+//! solve, matching the custom VJPs in linalg_hlo.py which treat jitter and
+//! chol(C) as constants).  Each raw parameter then contracts
+//! G = 1/2 c c^T - P/(2 s2), P = S (Q + eps_Q I)^{-1} S^T, against
+//! dK/dtheta_j from `Kernel::eval_with_grad`.  The noise parameter enters
+//! only through the scalar s2, so its gradient is a central finite
+//! difference over a cheap O(k^3) re-evaluation that reuses every
+//! K-dependent intermediate.
+
+use anyhow::Result;
+
+use crate::gp::ski::Lattice;
+use crate::kernels::{softplus, Kernel};
+use crate::linalg::{axpy, dot, Cholesky, Mat};
+use crate::runtime::{ArtifactSpec, Tensor};
+
+const LOG_2PI: f64 = 1.8378770664093453;
+/// Jitters mirror model.py (Q_JITTER / C_JITTER).
+const Q_JITTER: f64 = 1e-4;
+const C_JITTER: f64 = 1e-4;
+/// Basis-growth tolerance, model.py:_basis_update.
+const GROW_TOL: f64 = 1e-4;
+/// Central-difference step (on the raw noise parameter).
+const NOISE_FD_EPS: f64 = 1e-5;
+
+/// f64 view of the six caches (wty, yty, n, U, C, krank).
+struct Caches {
+    wty: Vec<f64>,
+    yty: f64,
+    n: f64,
+    u: Mat,
+    c: Mat,
+    krank: usize,
+}
+
+impl Caches {
+    fn unpack(t: &[Tensor], m: usize, r: usize) -> Self {
+        let wty = t[0].to_f64_vec();
+        let u = Mat { rows: m, cols: r, data: t[3].to_f64_vec() };
+        let c = Mat { rows: r, cols: r, data: t[4].to_f64_vec() };
+        Self {
+            wty,
+            yty: t[1].item() as f64,
+            n: t[2].item() as f64,
+            u,
+            c,
+            krank: (t[5].item() as f64).round().max(0.0) as usize,
+        }
+    }
+
+    fn pack(&self, m: usize, r: usize) -> Vec<Tensor> {
+        vec![
+            Tensor::vec1(self.wty.iter().map(|&v| v as f32).collect()),
+            Tensor::scalar(self.yty as f32),
+            Tensor::scalar(self.n as f32),
+            Tensor::new(vec![m, r], self.u.data.iter().map(|&v| v as f32).collect()),
+            Tensor::new(vec![r, r], self.c.data.iter().map(|&v| v as f32).collect()),
+            Tensor::scalar(self.krank as f32),
+        ]
+    }
+}
+
+/// Rank-one update of A = U C U^T <- A + w w^T (kernels/ref.py semantics):
+/// grow the orthonormal basis while rank and residual allow, otherwise drop
+/// the out-of-span residual (the Table 1 saturation regime).
+fn basis_update(caches: &mut Caches, w: &[f64], r: usize) {
+    let m = caches.u.rows;
+    let ke = caches.krank;
+    // p = U^T w over the live columns, with one re-orthogonalization pass
+    let mut p = vec![0.0; ke];
+    for i in 0..m {
+        let row = caches.u.row(i);
+        for (j, pj) in p.iter_mut().enumerate() {
+            *pj += row[j] * w[i];
+        }
+    }
+    let mut w_perp: Vec<f64> = (0..m)
+        .map(|i| w[i] - dot(&caches.u.row(i)[..ke], &p))
+        .collect();
+    let mut corr = vec![0.0; ke];
+    for i in 0..m {
+        let row = caches.u.row(i);
+        for (j, cj) in corr.iter_mut().enumerate() {
+            *cj += row[j] * w_perp[i];
+        }
+    }
+    for i in 0..m {
+        w_perp[i] -= dot(&caches.u.row(i)[..ke], &corr);
+    }
+    let p_full: Vec<f64> = p.iter().zip(&corr).map(|(a, b)| a + b).collect();
+    let rho2: f64 = dot(&w_perp, &w_perp);
+    let rho = rho2.max(1e-30).sqrt();
+    let wnorm2 = dot(w, w).max(1e-30);
+    let grow = ke < r && rho2 > GROW_TOL * GROW_TOL * wnorm2;
+
+    let qlen = if grow { ke + 1 } else { ke };
+    let mut qv = vec![0.0; qlen];
+    qv[..ke].copy_from_slice(&p_full);
+    if grow {
+        qv[ke] = rho;
+        for i in 0..m {
+            caches.u[(i, ke)] = w_perp[i] / rho;
+        }
+        caches.krank = ke + 1;
+    }
+    for a in 0..qlen {
+        for b in 0..qlen {
+            caches.c[(a, b)] += qv[a] * qv[b];
+        }
+    }
+}
+
+/// The shared Q-system (model.py:_q_system) over the effective rank.
+struct QSystem {
+    s2: f64,
+    kuu: Mat,
+    ke: usize,
+    /// S = U_k Ch, m x ke.
+    s_mat: Mat,
+    /// chol(Q + Q_JITTER I), ke x ke.
+    cholq: Cholesky,
+    k_wty: Vec<f64>,
+    b_vec: Vec<f64>,
+    /// Ch^T (U^T K U) Ch — Q = I + g0/s2 (reused by the noise FD).
+    g0: Mat,
+    /// Ch^T U^T K wty — a = a0/s2 (reused by the noise FD).
+    a0: Vec<f64>,
+    wty_k_wty: f64,
+}
+
+impl QSystem {
+    fn build(kernel: &Kernel, theta: &[f64], coords: &[Vec<f64>], caches: &Caches) -> Self {
+        let m = caches.u.rows;
+        let r = caches.u.cols;
+        let ke = caches.krank.min(r);
+        let s2 = kernel.noise_var(theta);
+        // dense lattice covariance; symmetric, so evaluate one triangle
+        let mut kuu = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in i..m {
+                let v = kernel.eval(theta, &coords[i], &coords[j]);
+                kuu[(i, j)] = v;
+                kuu[(j, i)] = v;
+            }
+        }
+        let u_eff = Mat::from_fn(m, ke, |i, j| caches.u[(i, j)]);
+        let c_eff = Mat::from_fn(ke, ke, |i, j| caches.c[(i, j)]);
+        let ch = Cholesky::factor_floored(&c_eff, C_JITTER).l;
+        let ku = kuu.matmul(&u_eff); // m x ke
+        let t_mat = u_eff.transpose().matmul(&ku); // ke x ke
+        let g0 = ch.transpose().matmul(&t_mat.matmul(&ch));
+        let qmat = Mat::from_fn(ke, ke, |i, j| {
+            g0[(i, j)] / s2 + if i == j { 1.0 } else { 0.0 }
+        });
+        let cholq = Cholesky::factor_floored(&qmat, Q_JITTER);
+        let k_wty = kuu.matvec(&caches.wty);
+        let a0 = ch.matvec_t(&u_eff.matvec_t(&k_wty));
+        let a: Vec<f64> = a0.iter().map(|v| v / s2).collect();
+        let b_vec = cholq.solve(&a);
+        let s_mat = u_eff.matmul(&ch);
+        let wty_k_wty = dot(&caches.wty, &k_wty);
+        Self { s2, kuu, ke, s_mat, cholq, k_wty, b_vec, g0, a0, wty_k_wty }
+    }
+
+    /// MLL as a function of s2 only, reusing every K-dependent piece.
+    fn mll_at_s2(&self, s2: f64, yty: f64, n: f64) -> f64 {
+        let ke = self.ke;
+        let qmat = Mat::from_fn(ke, ke, |i, j| {
+            self.g0[(i, j)] / s2 + if i == j { 1.0 } else { 0.0 }
+        });
+        let cholq = Cholesky::factor_floored(&qmat, Q_JITTER);
+        let a: Vec<f64> = self.a0.iter().map(|v| v / s2).collect();
+        let b = cholq.solve(&a);
+        let ymy = self.wty_k_wty / s2 - dot(&a, &b);
+        -(yty - ymy) / (2.0 * s2) - (cholq.logdet() + n * s2.ln()) / 2.0 - n / 2.0 * LOG_2PI
+    }
+
+    /// MLL value and its gradient w.r.t. every raw theta entry.
+    fn mll_and_grad(
+        &self,
+        kernel: &Kernel,
+        theta: &[f64],
+        coords: &[Vec<f64>],
+        caches: &Caches,
+    ) -> (f64, Vec<f64>) {
+        let m = self.kuu.rows;
+        let td = kernel.theta_dim();
+        let val = self.mll_at_s2(self.s2, caches.yty, caches.n);
+        let mut grad = vec![0.0; td];
+
+        // c = (wty - S b)/s2 and W with rows W_j = (Q + eps)^{-1} S_j
+        let h = self.s_mat.matvec(&self.b_vec);
+        let c_vec: Vec<f64> = caches
+            .wty
+            .iter()
+            .zip(&h)
+            .map(|(w, hv)| (w - hv) / self.s2)
+            .collect();
+        let mut wsol = Mat::zeros(m, self.ke);
+        for j in 0..m {
+            let sol = self.cholq.solve(self.s_mat.row(j));
+            wsol.row_mut(j).copy_from_slice(&sol);
+        }
+        // contract G = 1/2 c c^T - P/(2 s2) against dK/dtheta_j
+        let mut dk = vec![0.0; td];
+        for u in 0..m {
+            for v in u..m {
+                let p_uv = dot(self.s_mat.row(u), wsol.row(v));
+                let g_uv = 0.5 * c_vec[u] * c_vec[v] - p_uv / (2.0 * self.s2);
+                let wgt = if u == v { 1.0 } else { 2.0 };
+                kernel.eval_with_grad(theta, &coords[u], &coords[v], &mut dk);
+                for (gj, dkj) in grad.iter_mut().zip(&dk).take(td - 1) {
+                    *gj += wgt * g_uv * dkj;
+                }
+            }
+        }
+        // noise: central difference on the raw parameter through s2 only
+        let raw = theta[td - 1];
+        let s2p = softplus(raw + NOISE_FD_EPS) + 1e-6;
+        let s2m = softplus(raw - NOISE_FD_EPS) + 1e-6;
+        grad[td - 1] = (self.mll_at_s2(s2p, caches.yty, caches.n)
+            - self.mll_at_s2(s2m, caches.yty, caches.n))
+            / (2.0 * NOISE_FD_EPS);
+        (val, grad)
+    }
+}
+
+fn unpack_common(spec: &ArtifactSpec) -> Result<(Kernel, Lattice, usize, usize)> {
+    let kind = spec
+        .meta
+        .get("kind")
+        .map(String::as_str)
+        .unwrap_or("rbf")
+        .to_string();
+    let d = spec.meta_usize("d")?;
+    let g = spec.meta_usize("g")?;
+    let r = spec.meta_usize("r")?;
+    Ok((Kernel::from_kind(&kind, d), Lattice::new(g, d), d, r))
+}
+
+fn lattice_coords(lattice: &Lattice) -> Vec<Vec<f64>> {
+    (0..lattice.m()).map(|i| lattice.coords(i)).collect()
+}
+
+fn theta_f64(t: &Tensor) -> Vec<f64> {
+    t.to_f64_vec()
+}
+
+/// `wiski_step_*`: condition on the masked batch, then MLL + grad on the
+/// updated caches (Algorithm 1 ordering).
+pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let (kernel, lattice, d, r) = unpack_common(spec)?;
+    let q = spec.meta_usize("q")?;
+    let m = lattice.m();
+    let theta = theta_f64(&inputs[0]);
+    let mut caches = Caches::unpack(&inputs[1..7], m, r);
+    let (x, y, s, mask) = (&inputs[7], &inputs[8], &inputs[9], &inputs[10]);
+    for i in 0..q {
+        if mask.data[i] <= 0.0 {
+            continue;
+        }
+        let pt: Vec<f64> = (0..d).map(|k| x.data[i * d + k] as f64).collect();
+        let si = (s.data[i] as f64).max(1e-12);
+        let w: Vec<f64> = lattice.interp_row(&pt).iter().map(|v| v / si).collect();
+        let yi = y.data[i] as f64 / si;
+        basis_update(&mut caches, &w, r);
+        axpy(yi, &w, &mut caches.wty);
+        caches.yty += yi * yi;
+        caches.n += 1.0;
+    }
+    let coords = lattice_coords(&lattice);
+    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
+    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &coords, &caches);
+    let mut out = caches.pack(m, r);
+    out.push(Tensor::scalar(val as f32));
+    out.push(Tensor::vec1(grad.iter().map(|&v| v as f32).collect()));
+    Ok(out)
+}
+
+/// `wiski_mll_*`: MLL + grad on the current caches (refit channel).
+pub(super) fn mll(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let (kernel, lattice, _d, r) = unpack_common(spec)?;
+    let m = lattice.m();
+    let theta = theta_f64(&inputs[0]);
+    let caches = Caches::unpack(&inputs[1..7], m, r);
+    let coords = lattice_coords(&lattice);
+    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
+    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &coords, &caches);
+    Ok(vec![
+        Tensor::scalar(val as f32),
+        Tensor::vec1(grad.iter().map(|&v| v as f32).collect()),
+    ])
+}
+
+/// `wiski_predict_*`: posterior marginals at the query batch.
+pub(super) fn predict(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let (kernel, lattice, d, r) = unpack_common(spec)?;
+    let b = spec.meta_usize("b")?;
+    let m = lattice.m();
+    let theta = theta_f64(&inputs[0]);
+    let caches = Caches::unpack(&inputs[1..7], m, r);
+    let xstar = &inputs[7];
+    let coords = lattice_coords(&lattice);
+    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
+
+    // mean cache = K (wty - S b)/s2
+    let h = sys.s_mat.matvec(&sys.b_vec);
+    let kh = sys.kuu.matvec(&h);
+    let mean_cache: Vec<f64> = sys
+        .k_wty
+        .iter()
+        .zip(&kh)
+        .map(|(kw, k_h)| (kw - k_h) / sys.s2)
+        .collect();
+
+    let mut mean = vec![0f32; b];
+    let mut var = vec![0f32; b];
+    let mut kw = vec![0.0f64; m];
+    for i in 0..b {
+        let pt: Vec<f64> = (0..d).map(|k| xstar.data[i * d + k] as f64).collect();
+        let w = lattice.interp_row(&pt);
+        mean[i] = dot(&w, &mean_cache) as f32;
+        // kw = K w, exploiting the 4^d sparsity of w and symmetry of K
+        kw.iter_mut().for_each(|v| *v = 0.0);
+        for (j, &wj) in w.iter().enumerate() {
+            if wj != 0.0 {
+                axpy(wj, sys.kuu.row(j), &mut kw);
+            }
+        }
+        let a2 = sys.s_mat.matvec_t(&kw);
+        let qs = sys.cholq.solve(&a2);
+        let v = dot(&w, &kw) - dot(&a2, &qs) / sys.s2;
+        var[i] = v.max(1e-10) as f32;
+    }
+    Ok(vec![
+        Tensor::vec1(mean),
+        Tensor::vec1(var),
+        Tensor::scalar(sys.s2 as f32),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Executor, NativeBackend};
+    use crate::rng::Rng;
+
+    fn small_backend() -> NativeBackend {
+        let mut be = NativeBackend::empty();
+        be.add_wiski_family("rbf", 2, 8, 64, 1, 256, true);
+        be
+    }
+
+    fn zero_cache_inputs(theta: Vec<f32>, m: usize, r: usize) -> Vec<Tensor> {
+        vec![
+            Tensor::vec1(theta),
+            Tensor::zeros(&[m]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::zeros(&[m, r]),
+            Tensor::zeros(&[r, r]),
+            Tensor::scalar(0.0),
+        ]
+    }
+
+    #[test]
+    fn step_conditions_and_reports_finite_mll() {
+        let be = small_backend();
+        let mut ins = zero_cache_inputs(vec![0.5, 0.5, 0.54, -2.0], 64, 64);
+        ins.push(Tensor::new(vec![1, 2], vec![0.3, -0.2]));
+        ins.push(Tensor::vec1(vec![0.7]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(out[2].item(), 1.0, "n");
+        assert_eq!(out[5].item(), 1.0, "krank");
+        assert!(out[6].item().is_finite(), "mll");
+        assert!(out[7].data.iter().all(|g| g.is_finite()), "grad");
+        // wty = y * w: sums to y because interpolation rows sum to 1
+        let wty_sum: f32 = out[0].data.iter().sum();
+        assert!((wty_sum - 0.7).abs() < 1e-5, "wty sum {wty_sum}");
+    }
+
+    #[test]
+    fn masked_points_are_ignored() {
+        let be = small_backend();
+        let mut ins = zero_cache_inputs(vec![0.5, 0.5, 0.54, -2.0], 64, 64);
+        ins.push(Tensor::new(vec![1, 2], vec![0.3, -0.2]));
+        ins.push(Tensor::vec1(vec![0.7]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        ins.push(Tensor::vec1(vec![0.0])); // masked out
+        let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+        assert_eq!(out[2].item(), 0.0, "n");
+        assert_eq!(out[5].item(), 0.0, "krank");
+        assert!(out[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prior_predict_is_zero_mean_positive_var() {
+        let be = small_backend();
+        let mut ins = zero_cache_inputs(vec![0.5, 0.5, 0.54, -2.0], 64, 64);
+        let bsize = 256;
+        let mut xs = vec![0f32; bsize * 2];
+        let mut rng = Rng::new(3);
+        for v in xs.iter_mut() {
+            *v = rng.range(-1.0, 1.0) as f32;
+        }
+        ins.push(Tensor::new(vec![bsize, 2], xs));
+        let out = be.exec("wiski_predict_rbf_d2_g8_r64_b256", &ins).unwrap();
+        for i in 0..bsize {
+            assert_eq!(out[0].data[i], 0.0, "prior mean must be zero");
+            assert!(out[1].data[i] > 0.0);
+        }
+        let sig2 = out[2].item() as f64;
+        assert!((sig2 - (softplus(-2.0) + 1e-6)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mll_grad_matches_finite_differences_of_mll() {
+        // Self-consistency of the analytic contraction: perturb each raw
+        // theta entry and compare the mll artifact's gradient against a
+        // central difference of its value output.
+        let be = small_backend();
+        let mut rng = Rng::new(11);
+        // condition on a handful of points first
+        let mut caches = zero_cache_inputs(vec![0.4, 0.6, 0.3, -1.2], 64, 64);
+        for _ in 0..12 {
+            let mut ins = caches.clone();
+            ins.push(Tensor::new(
+                vec![1, 2],
+                vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+            ));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+        }
+        let name = "wiski_mll_rbf_d2_g8_r64";
+        let base = be.exec(name, &caches).unwrap();
+        let grad = &base[1].data;
+        let eps = 5e-3f32;
+        for j in 0..4 {
+            let mut plus = caches.clone();
+            let mut minus = caches.clone();
+            plus[0].data[j] += eps;
+            minus[0].data[j] -= eps;
+            let vp = be.exec(name, &plus).unwrap()[0].item() as f64;
+            let vm = be.exec(name, &minus).unwrap()[0].item() as f64;
+            let fd = (vp - vm) / (2.0 * eps as f64);
+            let g = grad[j] as f64;
+            assert!(
+                (g - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {j}: analytic {g} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn krank_saturates_at_r_and_stays_finite() {
+        let mut be = NativeBackend::empty();
+        be.add_wiski_family("rbf", 2, 8, 8, 1, 256, false); // tiny rank r=8
+        let mut caches = zero_cache_inputs(vec![0.5, 0.5, 0.54, -2.0], 64, 8);
+        let mut rng = Rng::new(5);
+        let mut last = None;
+        for _ in 0..20 {
+            let mut ins = caches.clone();
+            ins.push(Tensor::new(
+                vec![1, 2],
+                vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+            ));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            let out = be.exec("wiski_step_rbf_d2_g8_r8_q1", &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+            last = Some(out);
+        }
+        let out = last.unwrap();
+        assert_eq!(out[5].item(), 8.0, "krank saturates at r");
+        assert!(out[6].item().is_finite());
+    }
+}

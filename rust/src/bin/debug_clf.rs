@@ -1,11 +1,10 @@
 //! Dev scratch: diagnose the Dirichlet classifier.
-use std::sync::Arc;
+use wiski::backend::default_backend;
 use wiski::data::{self, Projection};
 use wiski::gp::{DirichletClassifier, Wiski, WiskiConfig};
-use wiski::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
     let ds = data::banana(300, 0);
     let make = || {
         Wiski::new(rt.clone(), WiskiConfig { lr: 5e-3, ..WiskiConfig::default() },

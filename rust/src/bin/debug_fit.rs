@@ -1,13 +1,12 @@
 //! Dev scratch: diagnose WISKI online fit quality.
-use std::sync::Arc;
+use wiski::backend::default_backend;
 use wiski::data::Projection;
 use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
 use wiski::kernels::softplus;
 use wiski::rng::Rng;
-use wiski::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new("artifacts")?);
+    let rt = default_backend("artifacts")?;
     for (label, grad, r, ls) in [
         ("frozen r128", false, 128usize, 0.3),
         ("frozen r256", false, 256, 0.3),

@@ -7,11 +7,12 @@
 //!
 //!   clients --mpsc--> [router thread: drain queue, coalesce Observe
 //!                      requests up to the artifact batch q, interleave
-//!                      Predict] --owns--> OnlineGp model + PJRT runtime
+//!                      Predict] --owns--> OnlineGp model + backend
 //!
 //! tokio is not in the offline vendor set, so the event loop is
-//! std::thread + std::sync::mpsc (one worker per model; the PJRT CPU
-//! client itself parallelizes the heavy kernels internally).
+//! std::thread + std::sync::mpsc (one worker per model).  Observe requests
+//! are fire-and-forget; failures are surfaced through the
+//! `ServerStats::observe_errors` counter rather than a reply channel.
 
 mod server;
 

@@ -40,6 +40,13 @@ pub struct ServerStats {
     pub refits: u64,
     pub observe_time_us: f64,
     pub predict_time_us: f64,
+    /// Observe batches whose `observe_batch` failed.  Observations are
+    /// fire-and-forget (no reply channel), so without this counter a
+    /// failing model silently drops data; callers assert on it after
+    /// `flush` (see the round-trip test and `serve`).
+    pub observe_errors: u64,
+    /// The most recent observe failure, for diagnostics.
+    pub last_error: Option<String>,
 }
 
 impl ServerStats {
@@ -125,23 +132,34 @@ impl ModelServer {
         let join = std::thread::spawn(move || {
             let mut pending_x: Vec<Vec<f64>> = Vec::new();
             let mut pending_y: Vec<f64> = Vec::new();
+            // Applies the queued micro-batch.  Failures are *recorded*, not
+            // just printed: observes carry no reply channel, so the error
+            // counter (asserted on by callers after `flush`) is the only
+            // signal that data was dropped.
             let flush_pending = |model: &mut M,
                                  pending_x: &mut Vec<Vec<f64>>,
-                                 pending_y: &mut Vec<f64>|
-             -> Result<()> {
+                                 pending_y: &mut Vec<f64>| {
                 if pending_x.is_empty() {
-                    return Ok(());
+                    return;
                 }
                 let t0 = Instant::now();
-                model.observe_batch(pending_x, pending_y)?;
+                let result = model.observe_batch(pending_x, pending_y);
                 let dt = t0.elapsed().as_secs_f64() * 1e6;
                 let mut st = stats_worker.lock().unwrap();
-                st.observed += pending_x.len() as u64;
-                st.observe_batches += 1;
-                st.observe_time_us += dt;
+                match result {
+                    Ok(()) => {
+                        st.observed += pending_x.len() as u64;
+                        st.observe_batches += 1;
+                        st.observe_time_us += dt;
+                    }
+                    Err(e) => {
+                        st.observe_errors += 1;
+                        st.last_error = Some(format!("{e:#}"));
+                        eprintln!("observe error: {e:#}");
+                    }
+                }
                 pending_x.clear();
                 pending_y.clear();
-                Ok(())
             };
             while let Ok(req) = rx.recv() {
                 match req {
@@ -157,11 +175,7 @@ impl ModelServer {
                                 }
                                 Ok(other) => {
                                     // non-observe: flush, then handle it
-                                    if let Err(e) =
-                                        flush_pending(&mut model, &mut pending_x, &mut pending_y)
-                                    {
-                                        eprintln!("observe error: {e:#}");
-                                    }
+                                    flush_pending(&mut model, &mut pending_x, &mut pending_y);
                                     if !Self::handle_other(
                                         &mut model,
                                         other,
@@ -174,14 +188,10 @@ impl ModelServer {
                                 Err(_) => break,
                             }
                         }
-                        if let Err(e) = flush_pending(&mut model, &mut pending_x, &mut pending_y) {
-                            eprintln!("observe error: {e:#}");
-                        }
+                        flush_pending(&mut model, &mut pending_x, &mut pending_y);
                     }
                     other => {
-                        if let Err(e) = flush_pending(&mut model, &mut pending_x, &mut pending_y) {
-                            eprintln!("observe error: {e:#}");
-                        }
+                        flush_pending(&mut model, &mut pending_x, &mut pending_y);
                         if !Self::handle_other(&mut model, other, &stats_worker) {
                             return;
                         }
@@ -269,9 +279,53 @@ mod tests {
         assert_eq!(stats.observed, 20);
         // micro-batching should have coalesced at least some requests
         assert!(stats.observe_batches <= 20);
+        // a healthy model must not have dropped any observation
+        assert_eq!(stats.observe_errors, 0, "last error: {:?}", stats.last_error);
+        assert!(stats.last_error.is_none());
         let preds = h.predict(vec![vec![0.0], vec![0.5]]).unwrap();
         assert_eq!(preds.len(), 2);
         assert!(preds[0].mean.is_finite());
+        server.shutdown();
+    }
+
+    /// A model whose `observe_batch` always fails: the router must keep
+    /// serving (no panic, predictions still answered) while counting every
+    /// dropped batch and retaining the message.
+    struct FailingModel;
+
+    impl OnlineGp for FailingModel {
+        fn name(&self) -> &str {
+            "failing"
+        }
+
+        fn num_observed(&self) -> usize {
+            0
+        }
+
+        fn observe(&mut self, _x: &[f64], _y: f64) -> Result<()> {
+            anyhow::bail!("synthetic observe failure")
+        }
+
+        fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+            Ok(vec![Prediction::default(); xs.len()])
+        }
+    }
+
+    #[test]
+    fn observe_failures_are_counted_not_swallowed() {
+        let server = ModelServer::spawn(FailingModel, 4);
+        let h = server.handle();
+        for i in 0..6 {
+            h.observe(vec![i as f64], 0.0).unwrap();
+        }
+        let stats = h.flush().unwrap();
+        assert_eq!(stats.observed, 0, "failed batches must not count as observed");
+        assert!(stats.observe_errors >= 1, "errors must be recorded");
+        let msg = stats.last_error.expect("last_error retained");
+        assert!(msg.contains("synthetic observe failure"), "{msg}");
+        // the router survives and still answers predictions
+        let preds = h.predict(vec![vec![0.0]]).unwrap();
+        assert_eq!(preds.len(), 1);
         server.shutdown();
     }
 

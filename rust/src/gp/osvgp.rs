@@ -1,8 +1,9 @@
 //! O-SVGP baseline driver: streaming sparse variational GP (Bui et al.
 //! 2017) with the generalized-VI beta weighting of the paper's Appendix B.
 //!
-//! The objective and its gradients are AOT artifacts
-//! (python/compile/osvgp.py); this struct owns the variational state
+//! The objective and its gradients are artifact calls (`osvgp_step_*` —
+//! executed natively by default, or as the python/compile/osvgp.py AOT
+//! graphs under `--features pjrt`); this struct owns the variational state
 //! (q_mu, q_raw), the inducing locations, the old-posterior snapshot, and
 //! Adam.  After each observation batch the old posterior is refreshed
 //! (old <- current), which is Bui et al.'s streaming recursion.
@@ -11,15 +12,16 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::backend::Executor;
 use crate::data::Projection;
 use crate::gp::{OnlineGp, Prediction};
 use crate::kernels::{inv_softplus, Kernel};
 use crate::optim::Adam;
 use crate::rng::Rng;
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::Tensor;
 
 pub struct OSvgp {
-    rt: Arc<Runtime>,
+    rt: Arc<dyn Executor>,
     kind: String,
     d: usize,
     pub m: usize,
@@ -51,7 +53,7 @@ pub struct OSvgp {
 impl OSvgp {
     /// `m` and `kind`/`d` must match an artifact family in the manifest.
     pub fn new(
-        rt: Arc<Runtime>,
+        rt: Arc<dyn Executor>,
         kind: &str,
         d: usize,
         m: usize,

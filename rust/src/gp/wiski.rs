@@ -1,21 +1,23 @@
 //! WISKI model: the paper's contribution, driven from Rust.
 //!
-//! All numerics live in the AOT artifacts (`wiski_step_*`, `wiski_predict_*`,
-//! `wiski_mll_*`); this struct owns the caches as host tensors, the theta
-//! buffer, the Adam state, the optional input projection, and the
-//! micro-batching of pending observations.  Every call is O(m^2)-bounded and
-//! independent of how many points have been observed — the paper's headline
-//! property, measured end-to-end in benches/fig2.
+//! All numerics live in the backend's artifact implementations
+//! (`wiski_step_*`, `wiski_predict_*`, `wiski_mll_*` — native Rust by
+//! default, AOT HLO under `--features pjrt`); this struct owns the caches
+//! as host tensors, the theta buffer, the Adam state, the optional input
+//! projection, and the micro-batching of pending observations.  Every call
+//! is O(m^2)-bounded and independent of how many points have been observed
+//! — the paper's headline property, measured end-to-end in benches/fig2.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::Executor;
 use crate::data::Projection;
 use crate::gp::{OnlineGp, Prediction};
 use crate::kernels::Kernel;
 use crate::optim::Adam;
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::Tensor;
 
 /// Configuration selecting an artifact variant.
 #[derive(Clone, Debug)]
@@ -72,7 +74,7 @@ impl WiskiConfig {
 /// on hypothetical points, read variances, drop.
 #[derive(Clone)]
 pub struct Wiski {
-    rt: Arc<Runtime>,
+    rt: Arc<dyn Executor>,
     pub cfg: WiskiConfig,
     step_name: String,
     predict_name: String,
@@ -94,8 +96,8 @@ pub struct Wiski {
 
 impl Wiski {
     /// Build a model bound to the artifact variant in `cfg`, discovering the
-    /// step batch q and predict batch b from the manifest.
-    pub fn new(rt: Arc<Runtime>, cfg: WiskiConfig, projection: Projection) -> Result<Self> {
+    /// step batch q and predict batch b from the backend's manifest.
+    pub fn new(rt: Arc<dyn Executor>, cfg: WiskiConfig, projection: Projection) -> Result<Self> {
         let kernel = Kernel::from_kind(&cfg.kind, cfg.d);
         // discover q/b variants present in the manifest
         let mut step_q = None;

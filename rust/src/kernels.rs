@@ -22,6 +22,16 @@ pub fn inv_softplus(y: f64) -> f64 {
     }
 }
 
+/// d softplus(x)/dx — the chain factor from raw to constrained parameters.
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
 /// Kernel family, mirroring the `kind` strings in the artifact manifest.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Kernel {
@@ -101,6 +111,73 @@ impl Kernel {
         self.eval(theta, x, x)
     }
 
+    /// k(a, b) together with its gradient w.r.t. every *raw* theta entry.
+    ///
+    /// `grad` must have length `theta_dim()`; the noise slot (last entry)
+    /// is left at zero — observation noise never enters k itself, its MLL
+    /// gradient is computed separately by the native backend.  This is the
+    /// analytic mirror of what jax autodiff produces through `covfns.kuu`,
+    /// used for the native theta-gradient contraction.
+    pub fn eval_with_grad(&self, theta: &[f64], a: &[f64], b: &[f64], grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.theta_dim());
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
+                let dim = *dim;
+                let os2 = softplus(theta[dim]) + 1e-6;
+                let mut d2 = 0.0;
+                for k in 0..dim {
+                    let ls = softplus(theta[k]) + 1e-6;
+                    let t = (a[k] - b[k]) / ls;
+                    d2 += t * t;
+                }
+                let (kval, rho) = if matches!(self, Kernel::Rbf { .. }) {
+                    (os2 * (-0.5 * d2).exp(), 0.0)
+                } else {
+                    let rho = (d2 + 1e-12).sqrt();
+                    (os2 * (-rho).exp(), rho)
+                };
+                for k in 0..dim {
+                    let ls = softplus(theta[k]) + 1e-6;
+                    let diff = a[k] - b[k];
+                    // d(-0.5 d2)/dls_k = diff^2/ls^3; matern scales by 1/rho
+                    let shape = if matches!(self, Kernel::Rbf { .. }) {
+                        diff * diff / (ls * ls * ls)
+                    } else {
+                        diff * diff / (ls * ls * ls * rho)
+                    };
+                    grad[k] = kval * shape * sigmoid(theta[k]);
+                }
+                grad[dim] = kval / os2 * sigmoid(theta[dim]);
+                kval
+            }
+            Kernel::SpectralMixture { q } => {
+                let q = *q;
+                let tau = a[0] - b[0];
+                let t2 = tau * tau;
+                let two_pi = 2.0 * std::f64::consts::PI;
+                let mut kval = 0.0;
+                for i in 0..q {
+                    let w = softplus(theta[i]) + 1e-8;
+                    let mu = softplus(theta[q + i]);
+                    let v = softplus(theta[2 * q + i]) + 1e-8;
+                    let env = (-2.0 * std::f64::consts::PI.powi(2) * t2 * v).exp();
+                    let osc = (two_pi * mu * tau).cos();
+                    kval += w * env * osc;
+                    grad[i] = env * osc * sigmoid(theta[i]);
+                    grad[q + i] =
+                        w * env * (-(two_pi * mu * tau).sin()) * two_pi * tau * sigmoid(theta[q + i]);
+                    grad[2 * q + i] = w * env * osc
+                        * (-2.0 * std::f64::consts::PI.powi(2) * t2)
+                        * sigmoid(theta[2 * q + i]);
+                }
+                kval
+            }
+        }
+    }
+
     /// Default raw theta: ls=0.3, outputscale=1.0, noise = noise_init.
     pub fn default_theta(&self, noise_init: f64) -> Vec<f64> {
         match self {
@@ -170,6 +247,35 @@ mod tests {
         let k0 = k.eval(&theta, &[0.0], &[0.0]);
         let k1 = k.eval(&theta, &[0.0], &[1.0]);
         assert!((k0 - k1).abs() < 0.05, "period-1 correlation should recur");
+    }
+
+    #[test]
+    fn eval_with_grad_matches_finite_differences() {
+        let cases: Vec<(Kernel, Vec<f64>, Vec<f64>)> = vec![
+            (Kernel::Rbf { dim: 2 }, vec![0.3, -0.2], vec![-0.1, 0.4]),
+            (Kernel::Matern12 { dim: 2 }, vec![0.3, -0.2], vec![-0.1, 0.4]),
+            (Kernel::SpectralMixture { q: 2 }, vec![0.15], vec![-0.35]),
+        ];
+        for (kernel, a, b) in cases {
+            let theta = kernel.default_theta(0.2);
+            let mut grad = vec![0.0; kernel.theta_dim()];
+            kernel.eval_with_grad(&theta, &a, &b, &mut grad);
+            let eps = 1e-6;
+            for j in 0..kernel.theta_dim() - 1 {
+                let mut tp = theta.clone();
+                let mut tm = theta.clone();
+                tp[j] += eps;
+                tm[j] -= eps;
+                let fd = (kernel.eval(&tp, &a, &b) - kernel.eval(&tm, &a, &b)) / (2.0 * eps);
+                assert!(
+                    (grad[j] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                    "{kernel:?} param {j}: analytic {} vs fd {fd}",
+                    grad[j]
+                );
+            }
+            // the noise slot never enters k(a, b)
+            assert_eq!(grad[kernel.theta_dim() - 1], 0.0);
+        }
     }
 
     #[test]

@@ -1,19 +1,53 @@
 //! WISKI — Woodbury Inversion with Structured Kernel Interpolation:
 //! constant-time online Gaussian processes (Stanton, Maddox, Delbridge &
-//! Wilson, AISTATS 2021), as a three-layer Rust + JAX + Pallas system.
+//! Wilson, AISTATS 2021).
 //!
-//! - [`runtime`]: PJRT executor for the AOT HLO artifacts built by
-//!   `python/compile` (jax L2 + Pallas L1; Python never runs at serve time).
+//! The model compresses the full posterior over a stream of n observations
+//! into fixed-size caches — `wty = W^T y`, `yty`, `n`, and a rank-r
+//! factorization `U C U^T = W^T W` of the interpolation Gram matrix — so
+//! conditioning, prediction, and the marginal-likelihood gradient all cost
+//! O(m^2) regardless of n.  Everything numeric is expressed as named
+//! *artifact calls* (`wiski_step_*`, `wiski_predict_*`, ...) with
+//! manifest-declared calling conventions, executed by a pluggable backend:
+//!
+//! - [`backend`]: the [`backend::Executor`] trait and the default
+//!   [`backend::NativeBackend`] — pure-Rust implementations of every
+//!   artifact family; the whole system runs offline with zero external
+//!   dependencies.  With `--features pjrt`, `runtime::Runtime` executes
+//!   AOT HLO artifacts built by `python/compile` on the PJRT CPU client
+//!   instead (Python never runs at serve time).
+//! - [`runtime`]: the shared vocabulary — [`runtime::Manifest`] calling
+//!   conventions and the [`runtime::Tensor`] host value type.
 //! - [`gp`]: the WISKI model and the paper's baselines (exact GP, local
-//!   GPs, O-SVGP, O-SGPR) behind one [`gp::OnlineGp`] trait.
+//!   GPs, O-SVGP, O-SGPR) behind one [`gp::OnlineGp`] trait, plus the
+//!   Dirichlet classification wrapper.
 //! - [`coordinator`]: threaded streaming server with observation
-//!   micro-batching.
+//!   micro-batching and error accounting.
 //! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
 //!   (the paper's §5.3 / §5.4 applications).
 //! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
 //!   from-scratch substrates (nothing beyond the vendored crates exists
 //!   offline).
+//!
+//! Quickstart (native backend, no artifacts needed):
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use std::sync::Arc;
+//! use wiski::backend::{Executor, NativeBackend};
+//! use wiski::data::Projection;
+//! use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
+//!
+//! let rt: Arc<dyn Executor> = Arc::new(NativeBackend::new());
+//! let mut model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
+//! model.observe(&[0.3, -0.2], 0.7)?;
+//! let pred = model.predict(&[vec![0.0, 0.0]])?;
+//! println!("mean {:.3} sd {:.3}", pred[0].mean, pred[0].var_y.sqrt());
+//! # Ok(())
+//! # }
+//! ```
 pub mod active;
+pub mod backend;
 pub mod bo;
 pub mod coordinator;
 pub mod data;

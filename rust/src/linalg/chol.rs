@@ -39,6 +39,36 @@ impl Cholesky {
         Ok(Self { l })
     }
 
+    /// Factor `a + jitter I` with pivot flooring instead of failure —
+    /// the Rust mirror of python/compile/linalg_hlo.py:chol, which the AOT
+    /// artifacts use for the (possibly rank-deficient) cache core C and the
+    /// inner system Q.  Trailing pivots of a rank-deficient input are pure
+    /// roundoff; flooring them at max(jitter, 1e-12) keeps 1/sqrt(piv)
+    /// bounded so deflated columns cannot blow up, and the factorization
+    /// never aborts mid-stream.
+    pub fn factor_floored(a: &Mat, jitter: f64) -> Self {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let floor = jitter.max(1e-12);
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut diag = a[(j, j)] + jitter;
+            for k in 0..j {
+                diag -= l[(j, k)] * l[(j, k)];
+            }
+            let ljj = diag.max(floor).sqrt();
+            l[(j, j)] = ljj;
+            for i in (j + 1)..n {
+                let mut v = a[(i, j)];
+                for k in 0..j {
+                    v -= l[(i, k)] * l[(j, k)];
+                }
+                l[(i, j)] = v / ljj;
+            }
+        }
+        Self { l }
+    }
+
     pub fn n(&self) -> usize {
         self.l.rows
     }
@@ -161,5 +191,31 @@ mod tests {
     fn rejects_non_pd() {
         let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
         assert!(Cholesky::factor(&a, 0.0).is_err());
+    }
+
+    #[test]
+    fn floored_matches_strict_on_pd_input() {
+        let a = random_spd(10, 7);
+        let strict = Cholesky::factor(&a, 1e-8).unwrap();
+        let floored = Cholesky::factor_floored(&a, 1e-8);
+        assert!(strict.l.max_abs_diff(&floored.l) < 1e-9);
+    }
+
+    #[test]
+    fn floored_survives_rank_deficiency() {
+        // rank-1 PSD matrix: strict factorization would hit a zero pivot
+        let v = [1.0, 2.0, -1.0, 0.5];
+        let a = Mat::from_fn(4, 4, |i, j| v[i] * v[j]);
+        let ch = Cholesky::factor_floored(&a, 1e-4);
+        for i in 0..4 {
+            assert!(ch.l[(i, i)] > 0.0, "pivot {i} not floored");
+            for j in 0..=i {
+                assert!(ch.l[(i, j)].is_finite());
+            }
+        }
+        // reconstruction error stays at the jitter scale
+        let lt = ch.l.transpose();
+        let rec = ch.l.matmul(&lt);
+        assert!(rec.max_abs_diff(&a) < 1e-2);
     }
 }

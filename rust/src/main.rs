@@ -3,15 +3,22 @@
 //! Subcommands (no clap offline; tiny hand-rolled parser):
 //!   info                      list artifacts and their calling conventions
 //!   serve [--stream N]        run the streaming coordinator demo
-//!   check                     compile every artifact and execute a probe
+//!   check                     prepare every artifact and execute a probe
+//!
+//! Global flags:
+//!   --backend native|pjrt     execution engine (default: native, or the
+//!                             WISKI_BACKEND environment variable)
+//!   --artifacts DIR           artifact directory for the pjrt backend
 use std::sync::Arc;
 
 use anyhow::Result;
+use wiski::backend::{backend_by_name, default_backend, Executor};
 use wiski::coordinator::ModelServer;
 use wiski::data::Projection;
 use wiski::gp::{Wiski, WiskiConfig};
+use wiski::kernels::inv_softplus;
 use wiski::rng::Rng;
-use wiski::runtime::Runtime;
+use wiski::runtime::Tensor;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -21,10 +28,18 @@ fn main() -> Result<()> {
         .position(|a| a == "--artifacts")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "artifacts".into());
+    let rt = match args
+        .iter()
+        .position(|a| a == "--backend")
+        .and_then(|i| args.get(i + 1).cloned())
+    {
+        Some(name) => backend_by_name(&name, &dir)?,
+        None => default_backend(&dir)?,
+    };
     match cmd {
-        "info" => info(&dir),
-        "serve" => serve(&dir, &args),
-        "check" => check(&dir),
+        "info" => info(&rt),
+        "serve" => serve(rt, &args),
+        "check" => check(&rt),
         other => {
             eprintln!("unknown command {other}; try: info | serve | check");
             std::process::exit(2);
@@ -32,11 +47,10 @@ fn main() -> Result<()> {
     }
 }
 
-fn info(dir: &str) -> Result<()> {
-    let rt = Runtime::new(dir)?;
+fn info(rt: &Arc<dyn Executor>) -> Result<()> {
     let mut names: Vec<&str> = rt.manifest().names().collect();
     names.sort_unstable();
-    println!("{} artifacts in {dir}/", names.len());
+    println!("{} artifacts on the {} backend", names.len(), rt.backend_name());
     for n in names {
         let s = rt.spec(n)?;
         println!("  {n}  ({} in, {} out)", s.inputs.len(), s.outputs.len());
@@ -44,14 +58,13 @@ fn info(dir: &str) -> Result<()> {
     Ok(())
 }
 
-fn serve(dir: &str, args: &[String]) -> Result<()> {
+fn serve(rt: Arc<dyn Executor>, args: &[String]) -> Result<()> {
     let n: usize = args
         .iter()
         .position(|a| a == "--stream")
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(1000);
-    let rt = Arc::new(Runtime::new(dir)?);
     let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
     let server = ModelServer::spawn(model, 8);
     let h = server.handle();
@@ -64,27 +77,84 @@ fn serve(dir: &str, args: &[String]) -> Result<()> {
     }
     let stats = h.flush()?;
     println!(
-        "streamed {} observations in {:.2?} ({:.0}us/batch, {:.1} obs/batch)",
+        "streamed {} observations in {:.2?} ({:.0}us/batch, {:.1} obs/batch, {} errors)",
         stats.observed,
         t0.elapsed(),
         stats.mean_observe_us(),
-        stats.observed as f64 / stats.observe_batches.max(1) as f64
+        stats.observed as f64 / stats.observe_batches.max(1) as f64,
+        stats.observe_errors
     );
+    if let Some(e) = &stats.last_error {
+        eprintln!("last observe error: {e}");
+    }
     let p = h.predict(vec![vec![0.0, 0.0]])?;
     println!("posterior at origin: {:+.3} +- {:.3}", p[0].mean, p[0].var_y.sqrt());
     server.shutdown();
     Ok(())
 }
 
-fn check(dir: &str) -> Result<()> {
-    let rt = Runtime::new(dir)?;
+/// Prepare every artifact and execute it once on synthesized probe inputs
+/// (zero caches, identity-style factors), proving the backend end-to-end.
+/// Non-finite outputs fail the check: this is the smoke gate README points
+/// at, and a NaN-producing backend must not pass it.
+fn check(rt: &Arc<dyn Executor>) -> Result<()> {
     let mut names: Vec<String> = rt.manifest().names().map(String::from).collect();
     names.sort_unstable();
+    let mut broken: Vec<String> = Vec::new();
     for n in &names {
         let t0 = std::time::Instant::now();
         rt.prepare(n)?;
-        println!("compiled {n} in {:.2?}", t0.elapsed());
+        let spec = rt.spec(n)?;
+        let inputs: Vec<Tensor> = spec.inputs.iter().map(probe_input).collect();
+        let out = rt.exec(n, &inputs)?;
+        let finite = out
+            .iter()
+            .all(|t| t.data.iter().all(|v| v.is_finite()));
+        if !finite {
+            broken.push(n.clone());
+        }
+        println!(
+            "ran {n} in {:.2?} ({} outputs{})",
+            t0.elapsed(),
+            out.len(),
+            if finite { "" } else { ", NON-FINITE VALUES" }
+        );
     }
-    println!("all {} artifacts compile", names.len());
+    if !broken.is_empty() {
+        anyhow::bail!(
+            "{} of {} artifacts produced non-finite outputs: {broken:?}",
+            broken.len(),
+            names.len()
+        );
+    }
+    println!("all {} artifacts execute on the {} backend", names.len(), rt.backend_name());
     Ok(())
+}
+
+/// A sensible default value for one probe input, keyed by convention name:
+/// triangular factors get an identity, noise scales and masks get ones,
+/// everything else zeros.
+fn probe_input(io: &wiski::runtime::IoSpec) -> Tensor {
+    match io.name.as_str() {
+        "old_l" => {
+            let m = io.shape[0];
+            let mut data = vec![0f32; m * m];
+            for i in 0..m {
+                data[i * m + i] = 1.0;
+            }
+            Tensor::new(io.shape.clone(), data)
+        }
+        "q_raw" => {
+            let m = io.shape[0];
+            let mut data = vec![0f32; m * m];
+            for i in 0..m {
+                data[i * m + i] = inv_softplus(1.0) as f32;
+            }
+            Tensor::new(io.shape.clone(), data)
+        }
+        "s" => Tensor::new(io.shape.clone(), vec![1.0; io.elem_count()]),
+        "mask" => Tensor::new(io.shape.clone(), vec![1.0; io.elem_count()]),
+        "beta" => Tensor::scalar(1e-3),
+        _ => Tensor::zeros(&io.shape),
+    }
 }

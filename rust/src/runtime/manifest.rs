@@ -44,6 +44,32 @@ pub struct ArtifactSpec {
 }
 
 impl ArtifactSpec {
+    /// Check `inputs` against the declared convention (count + element
+    /// counts), so calling-convention drift fails loudly in any backend.
+    pub fn validate_inputs(&self, inputs: &[super::Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, io) in inputs.iter().zip(&self.inputs) {
+            if t.len() != io.elem_count() {
+                bail!(
+                    "artifact {}: input {:?} expects shape {:?} ({} elems), got {} elems",
+                    self.name,
+                    io.name,
+                    io.shape,
+                    io.elem_count(),
+                    t.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Integer meta field (g, d, r, q, m, b...).
     pub fn meta_usize(&self, key: &str) -> Result<usize> {
         self.meta
@@ -139,6 +165,12 @@ impl Manifest {
             bail!("manifest ended mid-stanza for artifact {}", spec.name);
         }
         Ok(Self { specs })
+    }
+
+    /// Register a spec directly (used by backends that synthesize their
+    /// manifest instead of loading one from disk).
+    pub fn insert(&mut self, spec: ArtifactSpec) {
+        self.specs.insert(spec.name.clone(), spec);
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {

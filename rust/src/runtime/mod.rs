@@ -1,164 +1,30 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the hot path.
+//! Artifact calling conventions and host tensors — the shared vocabulary of
+//! every execution backend.
 //!
-//! Python (jax + Pallas) runs once at build time (`make artifacts`) and
-//! produces `artifacts/*.hlo.txt` plus `artifacts/manifest.txt` describing
-//! each artifact's calling convention.  This module owns the PJRT CPU client
-//! (via the `xla` crate / xla_extension 0.5.1), compiles each artifact
-//! lazily on first use, caches the executable, and exposes a typed
-//! `Tensor`-in / `Tensor`-out execute call.  Nothing here ever calls back
-//! into Python.
+//! A *manifest* ([`Manifest`] / [`ArtifactSpec`]) names each executable
+//! function (`wiski_step_rbf_d2_g16_r256_q1`, ...) and pins its calling
+//! convention: input/output names, dtypes, and shapes, plus integer meta
+//! (`g`, `d`, `r`, `q`, `b`, `m`). [`Tensor`] is the dense row-major f32
+//! value type crossing every backend border.
 //!
-//! # Threading
+//! Two things consume this vocabulary:
 //!
-//! The `xla` crate's wrappers are `!Send`/`!Sync` (Rc + raw pointers), but
-//! the PJRT CPU client itself is thread-safe C++.  We confine every xla
-//! object inside a single `Mutex` (client, executables, and all literals
-//! constructed during a call live and die under the lock) and assert
-//! `Send + Sync` for the wrapper.  One execution runs at a time per
-//! `Runtime`; the CPU client parallelizes internally across cores, so this
-//! serialization costs little for the model-server topology (one worker
-//! thread per model, baselines sharing the runtime from other threads).
+//! - [`crate::backend::NativeBackend`] *synthesizes* a manifest for its
+//!   built-in variants and executes the math in pure Rust (the default);
+//! - `pjrt::Runtime` (behind the `pjrt` cargo feature) *loads* a manifest
+//!   written by `python/compile/aot.py` next to AOT HLO-text artifacts and
+//!   executes them on the PJRT CPU client.
+//!
+//! Both implement [`crate::backend::Executor`], so models never know which
+//! one they run on.
 
 mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 mod tensor;
 
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use tensor::Tensor;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, bail, Context, Result};
-
-struct Inner {
-    client: xla::PjRtClient,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-/// Artifact registry + lazily compiling PJRT executor (see module docs).
-pub struct Runtime {
-    dir: PathBuf,
-    manifest: Manifest,
-    inner: Mutex<Inner>,
-}
-
-// SAFETY: every xla object (client, executables, literals) is owned by
-// `Inner` and only touched while holding `self.inner`; nothing xla-typed
-// is ever handed out. The PJRT CPU client's C++ side is thread-safe.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Runtime {
-    /// Open the artifact directory (must contain `manifest.txt`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.txt"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        Ok(Self {
-            dir,
-            manifest,
-            inner: Mutex::new(Inner { client, compiled: HashMap::new() }),
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// The spec for `name`, or an error listing what exists.
-    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.manifest.get(name).ok_or_else(|| {
-            let mut known: Vec<_> = self.manifest.names().collect();
-            known.sort_unstable();
-            anyhow!("unknown artifact {name:?}; known: {known:?}")
-        })
-    }
-
-    /// Compile `name` now (warms the cache; `exec` does this lazily too).
-    pub fn prepare(&self, name: &str) -> Result<()> {
-        let spec = self.spec(name)?.clone();
-        let mut inner = self.inner.lock().unwrap();
-        self.compile_locked(&mut inner, &spec)?;
-        Ok(())
-    }
-
-    fn compile_locked<'a>(
-        &self,
-        inner: &'a mut Inner,
-        spec: &ArtifactSpec,
-    ) -> Result<&'a xla::PjRtLoadedExecutable> {
-        if !inner.compiled.contains_key(&spec.name) {
-            let path = self.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .map_err(wrap_xla)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner.client.compile(&comp).map_err(wrap_xla)?;
-            inner.compiled.insert(spec.name.clone(), exe);
-        }
-        Ok(inner.compiled.get(&spec.name).unwrap())
-    }
-
-    /// Execute artifact `name` with host tensors; returns the output tuple.
-    ///
-    /// Inputs are validated against the manifest (count + element counts) so
-    /// a calling-convention drift between aot.py and the coordinator fails
-    /// loudly instead of producing garbage.
-    pub fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self.spec(name)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "artifact {name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (t, io) in inputs.iter().zip(&spec.inputs) {
-            if t.len() != io.elem_count() {
-                bail!(
-                    "artifact {name}: input {:?} expects shape {:?} ({} elems), got {} elems",
-                    io.name,
-                    io.shape,
-                    io.elem_count(),
-                    t.len()
-                );
-            }
-        }
-        let mut inner = self.inner.lock().unwrap();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&spec.inputs)
-            .map(|(t, io)| t.to_literal(&io.shape))
-            .collect::<Result<_>>()?;
-        let exe = self.compile_locked(&mut inner, &spec)?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(wrap_xla)?;
-        let mut out = result[0][0].to_literal_sync().map_err(wrap_xla)?;
-        // aot.py lowers with return_tuple=True: always a (possibly 1-ary) tuple.
-        let parts = out.decompose_tuple().map_err(wrap_xla)?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "artifact {name}: expected {} outputs, got {}",
-                spec.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, io)| {
-                let data = lit.to_vec::<f32>().map_err(wrap_xla)?;
-                Ok(Tensor::new(io.shape.clone(), data))
-            })
-            .collect()
-    }
-}
-
-/// The `xla` crate error type does not implement std::error::Error cleanly
-/// across versions; stringify.
-fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;

@@ -1,5 +1,7 @@
-//! Host-side f32 tensor: the only value type crossing the Rust<->PJRT border.
+//! Host-side f32 tensor: the only value type crossing a backend border
+//! (native math or PJRT artifacts).
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Dense row-major f32 tensor. Scalars have an empty shape.
@@ -54,10 +56,16 @@ impl Tensor {
         self.data[0]
     }
 
+    /// Widened copy of the buffer (native backends compute in f64).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        self.data.iter().map(|&v| v as f64).collect()
+    }
+
     /// Convert to an xla Literal with the manifest-declared shape.
     ///
     /// The manifest shape wins over `self.shape` (callers may pass flat
     /// buffers); element counts were validated by the runtime.
+    #[cfg(feature = "pjrt")]
     pub(crate) fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         if shape.is_empty() {

@@ -1,28 +1,24 @@
-//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
-//! the WISKI/O-SVGP models + coordinator.  Requires `make artifacts` to
-//! have been run (skips with a message otherwise, so `cargo test` stays
-//! green on a fresh checkout).
+//! Integration tests over the full stack: backend + the WISKI/O-SVGP
+//! models + coordinator.  These run on the native backend, so they execute
+//! everywhere offline with no artifacts directory.  To exercise the PJRT
+//! path instead, build with `--features pjrt`, run `make artifacts`, and
+//! set `WISKI_BACKEND=pjrt`.
 
 use std::sync::Arc;
 
+use wiski::backend::{default_backend, Executor};
 use wiski::coordinator::ModelServer;
 use wiski::data::{self, Projection};
 use wiski::gp::{DirichletClassifier, ExactGp, OnlineGp, OSvgp, SolveMethod, Wiski, WiskiConfig};
 use wiski::kernels::Kernel;
 use wiski::metrics::rmse;
 use wiski::rng::Rng;
-use wiski::runtime::Runtime;
 
-fn runtime() -> Option<Arc<Runtime>> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Runtime::new(dir).expect("runtime")))
+fn runtime() -> Arc<dyn Executor> {
+    default_backend("artifacts").expect("backend")
 }
 
-fn default_wiski(rt: &Arc<Runtime>) -> Wiski {
+fn default_wiski(rt: &Arc<dyn Executor>) -> Wiski {
     Wiski::new(rt.clone(), WiskiConfig::default(), Projection::identity(2)).expect("wiski")
 }
 
@@ -41,7 +37,7 @@ fn toy2d(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
 
 #[test]
 fn wiski_learns_toy_surface_online() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut model = default_wiski(&rt);
     let (xs, ys) = toy2d(300, 1);
     let (test_x, test_y) = toy2d(64, 2);
@@ -60,7 +56,7 @@ fn wiski_learns_toy_surface_online() {
 #[test]
 fn wiski_matches_exact_gp_posterior_shape() {
     // With dense data, the SKI posterior mean must track the exact GP's.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut wiski = default_wiski(&rt);
     wiski.cfg.grad_steps = 0; // freeze theta at shared defaults
     let mut exact = ExactGp::new(Kernel::Rbf { dim: 2 }, SolveMethod::Cholesky, 0.05, 0);
@@ -106,7 +102,7 @@ fn wiski_matches_exact_gp_posterior_shape() {
 #[test]
 fn wiski_observe_is_constant_time_in_n() {
     // The paper's headline: per-step cost must not grow with n (Fig. 2).
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut model = default_wiski(&rt);
     let (xs, ys) = toy2d(600, 5);
     // warm up + fill rank
@@ -137,7 +133,7 @@ fn wiski_observe_is_constant_time_in_n() {
 
 #[test]
 fn wiski_rank_saturation_kicks_in() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = WiskiConfig { r: 32, g: 16, ..WiskiConfig::default() };
     let mut model = Wiski::new(rt, cfg, Projection::identity(2)).unwrap();
     let (xs, ys) = toy2d(120, 6);
@@ -152,7 +148,7 @@ fn wiski_rank_saturation_kicks_in() {
 
 #[test]
 fn osvgp_baseline_learns_something() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     // theta rate 0.01: higher rates collapse the lengthscales (the paper's
     // appendix notes O-SVGP needs careful tuning; see debug_fit sweep)
     let mut model = OSvgp::new(rt, "rbf", 2, 64, 1e-3, 0.01, Projection::identity(2), 0).unwrap();
@@ -170,7 +166,7 @@ fn osvgp_baseline_learns_something() {
 
 #[test]
 fn dirichlet_classifier_separates_bananas() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let ds = data::banana(300, 0);
     let make = || {
         Wiski::new(
@@ -203,7 +199,7 @@ fn dirichlet_classifier_separates_bananas() {
 
 #[test]
 fn coordinator_serves_wiski_with_batching() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let model = default_wiski(&rt);
     let server = ModelServer::spawn(model, 4);
     let h = server.handle();
@@ -220,7 +216,7 @@ fn coordinator_serves_wiski_with_batching() {
 
 #[test]
 fn fx_spectral_mixture_variant_runs() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let cfg = WiskiConfig { kind: "sm4".into(), g: 128, d: 1, r: 64, lr: 5e-3, grad_steps: 1, learn_noise: true };
     let mut model = Wiski::new(rt, cfg, Projection::identity(1)).unwrap();
     let ds = data::fx_series(40, 0);
@@ -233,7 +229,7 @@ fn fx_spectral_mixture_variant_runs() {
 
 #[test]
 fn manifest_covers_all_experiment_variants() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let need = [
         "wiski_step_rbf_d2_g16_r128_q1",
         "wiski_predict_rbf_d2_g16_r128_b256",

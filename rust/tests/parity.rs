@@ -1,20 +1,22 @@
-//! Numerical parity tests: the Rust-side mirrors (SKI interpolation,
-//! kernels) must agree with what the AOT artifacts compute, so the native
-//! baselines and the artifact-backed WISKI live in the same numeric world.
+//! Numerical parity tests: the native backend's artifact implementations,
+//! the SKI interpolation mirror, and the exact-GP baseline must all live in
+//! the same numeric world.  These run offline on `NativeBackend` (no
+//! artifacts directory needed); with `--features pjrt` + `make artifacts` +
+//! `WISKI_BACKEND=pjrt` the same assertions exercise the AOT path.
 
 use std::sync::Arc;
 
+use wiski::backend::{default_backend, Executor, NativeBackend};
+use wiski::data::Projection;
 use wiski::gp::ski::Lattice;
+use wiski::gp::{ExactGp, OnlineGp, SolveMethod, Wiski, WiskiConfig};
 use wiski::kernels::Kernel;
-use wiski::runtime::{Runtime, Tensor};
+use wiski::metrics::rmse;
+use wiski::rng::Rng;
+use wiski::runtime::Tensor;
 
-fn runtime() -> Option<Arc<Runtime>> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Runtime::new(dir).expect("runtime")))
+fn runtime() -> Arc<dyn Executor> {
+    default_backend("artifacts").expect("backend")
 }
 
 /// Drive the predict artifact with a posterior conditioned on ONE point of
@@ -24,7 +26,7 @@ fn runtime() -> Option<Arc<Runtime>> {
 /// mean(x) = w(x)^T mean_cache.
 #[test]
 fn artifact_mean_is_linear_in_interp_rows() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let step = "wiski_step_rbf_d2_g8_r64_q1";
     let pred = "wiski_predict_rbf_d2_g8_r64_b256";
     let (m, r) = (64usize, 64usize);
@@ -90,7 +92,7 @@ fn artifact_mean_is_linear_in_interp_rows() {
 
 #[test]
 fn rust_kernel_matches_artifact_noise_param() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let pred = "wiski_predict_rbf_d2_g8_r64_b256";
     let (m, r) = (64usize, 64usize);
     let kernel = Kernel::Rbf { dim: 2 };
@@ -120,7 +122,7 @@ fn rust_kernel_matches_artifact_noise_param() {
 fn interp_row_partition_of_unity_matches_artifact_prior_mean() {
     // With zero caches the posterior mean must be exactly 0 everywhere and
     // variance positive: the artifact path and mirror agree on the prior.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let pred = "wiski_predict_rbf_d2_g8_r64_b256";
     let (m, r) = (64usize, 64usize);
     let mut pins: Vec<Tensor> = vec![Tensor::vec1(vec![0.5, 0.5, 0.54, -2.0])];
@@ -140,5 +142,133 @@ fn interp_row_partition_of_unity_matches_artifact_prior_mean() {
     for i in 0..256 {
         assert_eq!(out[0].data[i], 0.0, "prior mean must be zero");
         assert!(out[1].data[i] > 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native-backend parity vs the exact GP (the ISSUE-1 acceptance suite): the
+// WISKI posterior computed through the backend must track a dense exact GP
+// with the same (frozen) hyperparameters on streams where SKI's
+// interpolation error is small.
+// ---------------------------------------------------------------------------
+
+/// Build a frozen-theta WISKI and an exact GP sharing hyperparameters.
+fn frozen_pair(rt: &Arc<dyn Executor>, cfg: WiskiConfig, d: usize) -> (Wiski, ExactGp) {
+    let mut w = Wiski::new(rt.clone(), cfg, Projection::identity(d)).expect("wiski");
+    w.set_grad_enabled(false);
+    let mut e = ExactGp::new(Kernel::Rbf { dim: d }, SolveMethod::Cholesky, 0.05, 0);
+    e.theta = w.theta.clone();
+    (w, e)
+}
+
+#[test]
+fn native_wiski_posterior_matches_exact_gp_1d() {
+    let rt = runtime();
+    let cfg = WiskiConfig { kind: "rbf".into(), g: 32, d: 1, r: 32, lr: 0.0, grad_steps: 0, learn_noise: true };
+    let (mut w, mut e) = frozen_pair(&rt, cfg, 1);
+    let mut rng = Rng::new(21);
+    for _ in 0..60 {
+        let x = rng.range(-0.85, 0.85);
+        let y = (3.0 * x).sin() + 0.05 * rng.normal();
+        w.observe(&[x], y).unwrap();
+        e.observe(&[x], y).unwrap();
+    }
+    let qx: Vec<Vec<f64>> = (0..33).map(|i| vec![-0.8 + 1.6 * i as f64 / 32.0]).collect();
+    let pw = w.predict(&qx).unwrap();
+    let pe = e.predict(&qx).unwrap();
+    let mw: Vec<f64> = pw.iter().map(|p| p.mean).collect();
+    let me: Vec<f64> = pe.iter().map(|p| p.mean).collect();
+    let mean_err = rmse(&mw, &me);
+    assert!(mean_err < 0.07, "1-D mean parity rmse {mean_err}");
+    for (a, b) in pw.iter().zip(&pe) {
+        assert!(
+            (a.var_f - b.var_f).abs() < 0.08,
+            "1-D var parity: wiski {} vs exact {}",
+            a.var_f,
+            b.var_f
+        );
+    }
+}
+
+#[test]
+fn native_wiski_posterior_matches_exact_gp_2d() {
+    let rt = runtime();
+    // g=16 (h ~ 0.13 vs ls 0.3) keeps SKI's interpolation error well under
+    // the tolerance; r=128 > n so the root factorization stays exact.
+    let cfg = WiskiConfig { kind: "rbf".into(), g: 16, d: 2, r: 128, lr: 0.0, grad_steps: 0, learn_noise: true };
+    let (mut w, mut e) = frozen_pair(&rt, cfg, 2);
+    let mut rng = Rng::new(22);
+    let mut xs = vec![];
+    let mut ys = vec![];
+    for _ in 0..90 {
+        let x = vec![rng.range(-0.8, 0.8), rng.range(-0.8, 0.8)];
+        let y = (2.0 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+        xs.push(x);
+        ys.push(y);
+    }
+    w.observe_batch(&xs, &ys).unwrap();
+    e.observe_batch(&xs, &ys).unwrap();
+    let qx: Vec<Vec<f64>> = (0..32)
+        .map(|_| vec![rng.range(-0.7, 0.7), rng.range(-0.7, 0.7)])
+        .collect();
+    let pw = w.predict(&qx).unwrap();
+    let pe = e.predict(&qx).unwrap();
+    let mw: Vec<f64> = pw.iter().map(|p| p.mean).collect();
+    let me: Vec<f64> = pe.iter().map(|p| p.mean).collect();
+    let mean_err = rmse(&mw, &me);
+    assert!(mean_err < 0.12, "2-D mean parity rmse {mean_err}");
+    // variance ordering: where exact is most/least certain, wiski agrees
+    let top = pe
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.var_f.partial_cmp(&b.1.var_f).unwrap())
+        .unwrap()
+        .0;
+    let bot = pe
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.var_f.partial_cmp(&b.1.var_f).unwrap())
+        .unwrap()
+        .0;
+    assert!(pw[top].var_f >= pw[bot].var_f);
+}
+
+// ---------------------------------------------------------------------------
+// Synthesized-manifest discovery and cache shapes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn synthesized_manifest_discovers_default_variants() {
+    let be: Arc<dyn Executor> = Arc::new(NativeBackend::new());
+    // default config resolves against the synthesized manifest exactly the
+    // way it resolved against aot.py's manifest.txt
+    let w = Wiski::new(be.clone(), WiskiConfig::default(), Projection::identity(2));
+    assert!(w.is_ok(), "default WiskiConfig must resolve: {:?}", w.err().map(|e| e.to_string()));
+    // an unregistered variant is a clean construction-time error
+    let bad = WiskiConfig { g: 9, ..WiskiConfig::default() };
+    let err = Wiski::new(be, bad, Projection::identity(2))
+        .err()
+        .expect("unregistered variant must fail");
+    assert!(format!("{err}").contains("no wiski_step artifact"), "{err}");
+}
+
+#[test]
+fn native_step_outputs_match_declared_cache_shapes() {
+    let be = NativeBackend::new();
+    let name = "wiski_step_rbf_d2_g8_r64_q1";
+    let spec = be.spec(name).unwrap().clone();
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|io| match io.name.as_str() {
+            "s" | "mask" => Tensor::new(io.shape.clone(), vec![1.0; io.elem_count()]),
+            _ => Tensor::zeros(&io.shape),
+        })
+        .collect();
+    let out = be.exec(name, &inputs).unwrap();
+    assert_eq!(out.len(), spec.outputs.len());
+    for (t, io) in out.iter().zip(&spec.outputs) {
+        assert_eq!(t.len(), io.elem_count(), "output {:?} shape drift", io.name);
+        assert_eq!(t.shape, io.shape, "output {:?} shape drift", io.name);
     }
 }

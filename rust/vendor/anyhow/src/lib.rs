@@ -1,0 +1,169 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! Nothing beyond the standard library exists in this build environment, so
+//! the workspace vendors the small slice of anyhow it actually uses: the
+//! [`Error`] type (a context chain of messages), [`Result`], the [`anyhow!`]
+//! and [`bail!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Semantics match upstream where it matters:
+//!
+//! - `{}` displays the outermost (most recent) context message;
+//! - `{:#}` displays the whole chain as `outer: inner: root`;
+//! - `?` converts any `std::error::Error` into [`Error`];
+//! - `.context(..)` / `.with_context(..)` push a new outer message.
+//!
+//! [`Error`] deliberately does *not* implement `std::error::Error`, exactly
+//! like upstream anyhow, so the blanket `From<E: std::error::Error>` impl
+//! does not collide with the reflexive `From<Error>`.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`], with an overridable error type so the
+/// common `anyhow::Result<T>` and the rarer `anyhow::Result<T, E>` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message chain: `frames[0]` is the root cause, later frames wrap it.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { frames: vec![message.to_string()] }
+    }
+
+    /// Push an outer context frame (used by the [`Context`] trait).
+    pub fn wrap<M: fmt::Display>(mut self, message: M) -> Self {
+        self.frames.push(message.to_string());
+        self
+    }
+
+    /// The root-cause message (first frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: outermost first, then each inner cause.
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.frames.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream prints the outer message plus a "Caused by" list.
+        write!(f, "{}", self.frames.last().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in self.frames.iter().rev().skip(1) {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Early-return with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading config");
+        assert!(format!("{err:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.with_context(|| "missing value")?;
+            if v == 0 {
+                bail!("zero is invalid (got {v})");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", f(None).unwrap_err()), "missing value");
+        assert_eq!(format!("{}", f(Some(0)).unwrap_err()), "zero is invalid (got 0)");
+    }
+
+    #[test]
+    fn context_chain_formats_outer_to_root() {
+        let e = Error::msg("root").wrap("mid").wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+}

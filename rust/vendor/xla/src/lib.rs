@@ -1,0 +1,95 @@
+//! API-compatible stub of the `xla` crate (PJRT bindings over xla_extension).
+//!
+//! This image does not ship `libxla_extension`, so the workspace cannot link
+//! the real bindings. The `pjrt` cargo feature still has to *compile* — the
+//! artifact runner in `runtime::pjrt` is real code that runs unchanged
+//! against the genuine crate — so this stub mirrors the exact type and
+//! method surface the runner uses and fails at *runtime* (client
+//! construction) with a clear message instead of failing the build.
+//!
+//! To use the real PJRT path, replace this directory with the actual `xla`
+//! crate (LaurentMazare xla-rs pinned to xla_extension 0.5.1) and rebuild
+//! with `--features pjrt`.
+
+/// Stringly-typed error matching the `Debug`-driven handling in the runner
+/// (`wrap_xla` stringifies whatever the xla crate returns).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+pub type XlaResult<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> XlaResult<T> {
+    Err(XlaError(format!(
+        "{what}: xla_extension is not available in this build; the `pjrt` \
+         feature was compiled against the vendored stub (rust/vendor/xla). \
+         Install the real xla crate to execute AOT artifacts, or use the \
+         default NativeBackend."
+    )))
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> XlaResult<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn decompose_tuple(&mut self) -> XlaResult<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+
+    pub fn to_vec<T: Default>(&self) -> XlaResult<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
