@@ -17,7 +17,20 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== structured-vs-dense K_UU parity (explicit) =="
+# The Kronecker/Toeplitz operator suite is the guard against silent numeric
+# drift between the structured default path and the dense oracle; run it by
+# name so a filtered or skipped test file cannot slip through tier-1.
+cargo test -q --test structured
+
 echo "== cargo bench -- --list =="
-cargo bench -- --list
+bench_list=$(cargo bench -- --list)
+printf '%s\n' "$bench_list"
+for bench_name in wiski_kuu perf; do
+    if ! printf '%s\n' "$bench_list" | grep -q "$bench_name"; then
+        echo "ci.sh: bench section '$bench_name' missing from --list output" >&2
+        exit 1
+    fi
+done
 
 echo "ci.sh: all gates passed"

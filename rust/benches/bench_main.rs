@@ -14,7 +14,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use wiski::backend::{default_backend, Executor};
+use wiski::backend::{default_backend, Executor, NativeBackend};
 use wiski::bo::{run_bo, testfn_by_name};
 use wiski::data::{self, Projection};
 use wiski::gp::{
@@ -38,6 +38,7 @@ const SECTIONS: &[(&str, &str, BenchFn)] = &[
     ("ablation_beta", "Fig A.3: O-SVGP GVI beta ablation", ablation_beta),
     ("ablation_steps", "Fig A.2: O-SVGP grad-steps ablation", ablation_steps),
     ("perf", "microbenchmarks: per-op latencies across (m, r)", perf),
+    ("wiski_kuu", "dense vs structured K_UU: QSystem build + predict, g in {16,32,64}, d=2", wiski_kuu),
 ];
 
 fn main() {
@@ -491,6 +492,133 @@ fn ablation_steps(rt: &Arc<dyn Executor>) {
         println!("{steps:>10} {r:>11.4} {n:>10.3} {us:>9.0}");
     }
     println!("(paper Fig A.2: with batch=1 streams, extra steps help little)");
+}
+
+// --------------------------------------------------------------- wiski_kuu --
+
+/// Dense vs structured (Kronecker ⊗ Toeplitz) K_UU through the native
+/// backend: per-step cost (QSystem build + theta-gradient contraction) and
+/// predict cost, at g ∈ {16, 32, 64}, d = 2.  Results go to stdout and to
+/// BENCH_wiski_kuu.json at the repo root so the perf trajectory accumulates.
+fn wiski_kuu(_rt: &Arc<dyn Executor>) {
+    use wiski::runtime::Tensor;
+
+    fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    }
+
+    let r = 256usize;
+    let mut rows_json = Vec::new();
+    println!("    g     m   step-dense  step-struct  pred-dense  pred-struct  pred-warm   speedup(step/pred)");
+    for g in [16usize, 32, 64] {
+        let m = g * g;
+        let make = |dense: bool| -> NativeBackend {
+            let mut be = NativeBackend::empty();
+            be.add_wiski_family("rbf", 2, g, r, 1, 256, false);
+            if dense {
+                be.with_dense_kuu()
+            } else {
+                be
+            }
+        };
+        let sb = make(false);
+        let db = make(true);
+        let step_name = format!("wiski_step_rbf_d2_g{g}_r{r}_q1");
+        let pred_name = format!("wiski_predict_rbf_d2_g{g}_r{r}_b256");
+
+        // condition on 48 points (cache updates are identical on both
+        // backends, so stream once through the structured one)
+        let mut caches: Vec<Tensor> = vec![
+            Tensor::vec1(vec![0.4f32, 0.6, 0.3, -1.2]),
+            Tensor::zeros(&[m]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::zeros(&[m, r]),
+            Tensor::zeros(&[r, r]),
+            Tensor::scalar(0.0),
+        ];
+        let mut rng = wiski::rng::Rng::new(9);
+        let step_inputs = |caches: &[Tensor], rng: &mut wiski::rng::Rng| -> Vec<Tensor> {
+            let mut ins = caches.to_vec();
+            ins.push(Tensor::new(
+                vec![1, 2],
+                vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+            ));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins
+        };
+        for _ in 0..48 {
+            let ins = step_inputs(&caches, &mut rng);
+            let out = sb.exec(&step_name, &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+        }
+
+        // step = QSystem build + structured/dense gradient contraction
+        let sins = step_inputs(&caches, &mut rng);
+        let (s_reps, d_reps) = if g >= 64 { (8, 1) } else { (8, 2) };
+        let step_struct = time_ms(s_reps, || {
+            sb.exec(&step_name, &sins).unwrap();
+        });
+        let step_dense = time_ms(d_reps, || {
+            db.exec(&step_name, &sins).unwrap();
+        });
+
+        // predict: 256-query batch; theta nudged per rep to defeat the
+        // QSystem cache (cold), then unchanged for the warm (cached) row
+        let mut pins = caches.clone();
+        let mut xs = vec![0f32; 256 * 2];
+        for v in xs.iter_mut() {
+            *v = rng.range(-0.9, 0.9) as f32;
+        }
+        pins.push(Tensor::new(vec![256, 2], xs));
+        let pred_cold = |be: &NativeBackend, reps: usize| -> f64 {
+            let mut p = pins.clone();
+            let mut i = 0u32;
+            time_ms(reps, || {
+                i += 1;
+                p[0].data[0] = 0.4 + i as f32 * 1e-5; // new fingerprint
+                be.exec(&pred_name, &p).unwrap();
+            })
+        };
+        let pred_struct = pred_cold(&sb, s_reps);
+        let pred_dense = pred_cold(&db, d_reps);
+        sb.exec(&pred_name, &pins).unwrap(); // populate the cache
+        let pred_warm = time_ms(20, || {
+            sb.exec(&pred_name, &pins).unwrap();
+        });
+
+        let su_step = step_dense / step_struct;
+        let su_pred = pred_dense / pred_struct;
+        println!(
+            "{g:>5} {m:>5} {step_dense:>11.2} {step_struct:>12.2} {pred_dense:>11.2} {pred_struct:>12.2} {pred_warm:>10.2}   {su_step:>6.1}x / {su_pred:.1}x"
+        );
+        rows_json.push(format!(
+            "    {{\"g\": {g}, \"m\": {m}, \"r\": {r}, \"step_dense_ms\": {step_dense:.3}, \
+             \"step_structured_ms\": {step_struct:.3}, \"step_speedup\": {su_step:.2}, \
+             \"predict_cold_dense_ms\": {pred_dense:.3}, \"predict_cold_structured_ms\": {pred_struct:.3}, \
+             \"predict_speedup\": {su_pred:.2}, \"predict_warm_structured_ms\": {pred_warm:.3}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"wiski_kuu\",\n  \"d\": 2,\n  \"unit\": \"ms\",\n  \
+         \"note\": \"step = QSystem build + theta-grad contraction (q=1); predict = 256-query batch; \
+         warm = QSystem cache hit; produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wiski_kuu.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+    println!("(structured path never materializes the m x m K_UU; dense is the oracle)");
 }
 
 // -------------------------------------------------------------------- perf --

@@ -92,9 +92,18 @@ pub fn default_backend(artifacts_dir: &str) -> Result<Arc<dyn Executor>> {
 }
 
 /// Construct a backend by name ("native" | "pjrt").
+///
+/// For the native engine, `WISKI_KUU=dense` forces the dense K_UU oracle
+/// path (the structured Kronecker ⊗ Toeplitz operator is the default).
 pub fn backend_by_name(name: &str, artifacts_dir: &str) -> Result<Arc<dyn Executor>> {
     match name {
-        "native" => Ok(Arc::new(NativeBackend::new())),
+        "native" => {
+            let mut be = NativeBackend::new();
+            if matches!(std::env::var("WISKI_KUU").as_deref(), Ok("dense")) {
+                be = be.with_dense_kuu();
+            }
+            Ok(Arc::new(be))
+        }
         #[cfg(feature = "pjrt")]
         "pjrt" => Ok(Arc::new(crate::runtime::Runtime::new(artifacts_dir)?)),
         #[cfg(not(feature = "pjrt"))]

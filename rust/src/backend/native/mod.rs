@@ -9,9 +9,13 @@
 //! executes each call in f64 on host:
 //!
 //! - `wiski_step_*` / `wiski_predict_*` / `wiski_mll_*`: the paper's O(1)
-//!   online updates — cubic-interpolation rows, the U C U^T rank-r
-//!   factorization of W^T W, the Q-system MLL/predict identities, and
-//!   analytic theta gradients (see [`wiski`] module docs for the algebra).
+//!   online updates — sparse cubic-interpolation taps, the U C U^T rank-r
+//!   factorization of W^T W, the Q-system MLL/predict identities computed
+//!   through the Kronecker ⊗ Toeplitz K_UU operator (dense K_UU is never
+//!   materialized on the default path; [`NativeBackend::with_dense_kuu`]
+//!   forces the oracle), analytic theta gradients via per-dimension
+//!   structured contractions, and an executor-level Q-system cache (see
+//!   [`wiski`] module docs for the algebra).
 //! - `osvgp_step_*` / `osvgp_predict_*` / `osvgp_qfactor_*`: the streaming
 //!   variational baseline's generalized ELBO, with analytic (q_mu, q_raw)
 //!   gradients and finite-difference theta gradients.
@@ -33,6 +37,14 @@ use crate::runtime::{ArtifactSpec, IoSpec, Manifest, Tensor};
 /// Pure-Rust executor over a synthesized manifest (see module docs).
 pub struct NativeBackend {
     manifest: Manifest,
+    /// Memoized Q-systems (see [`wiski`] module docs): a predict/mll whose
+    /// (theta, caches) tensors match the last step's reuses its
+    /// factorization instead of rebuilding.
+    qcache: wiski::QCache,
+    /// Force the dense m×m K_UU path (parity oracle / benches).  Default
+    /// false: product-separable kernels go through the Kronecker ⊗ Toeplitz
+    /// operator and the dense matrix is never materialized.
+    force_dense_kuu: bool,
 }
 
 impl Default for NativeBackend {
@@ -86,7 +98,27 @@ impl NativeBackend {
     /// No variants registered; use the `add_*` methods to build a custom
     /// registry (tests register small grids this way).
     pub fn empty() -> Self {
-        Self { manifest: Manifest::default() }
+        Self {
+            manifest: Manifest::default(),
+            qcache: wiski::QCache::new(),
+            force_dense_kuu: false,
+        }
+    }
+
+    /// Switch this backend to the dense K_UU oracle path: K is materialized
+    /// and every product goes through the explicit matrix, exactly the
+    /// pre-structured semantics.  Used by the structured-vs-dense parity
+    /// suite and the `wiski_kuu` bench; also reachable via
+    /// `WISKI_KUU=dense` through [`super::default_backend`].
+    pub fn with_dense_kuu(mut self) -> Self {
+        self.force_dense_kuu = true;
+        self
+    }
+
+    /// True when the dense K_UU oracle path is forced (see
+    /// [`NativeBackend::with_dense_kuu`]).
+    pub fn dense_kuu_forced(&self) -> bool {
+        self.force_dense_kuu
     }
 
     /// Register a full WISKI family: step (batch `q`), predict (batch `b`),
@@ -276,11 +308,11 @@ impl Executor for NativeBackend {
         let spec = self.spec(name)?;
         spec.validate_inputs(inputs)?;
         if name.starts_with("wiski_step_") {
-            wiski::step(spec, inputs)
+            wiski::step(spec, inputs, &self.qcache, self.force_dense_kuu)
         } else if name.starts_with("wiski_predict_") {
-            wiski::predict(spec, inputs)
+            wiski::predict(spec, inputs, &self.qcache, self.force_dense_kuu)
         } else if name.starts_with("wiski_mll_") {
-            wiski::mll(spec, inputs)
+            wiski::mll(spec, inputs, &self.qcache, self.force_dense_kuu)
         } else if name.starts_with("osvgp_step_") {
             osvgp::step(spec, inputs)
         } else if name.starts_with("osvgp_predict_") {

@@ -14,6 +14,16 @@
 //!   mean = w*^T K c,                c = (wty - S b)/s2
 //!   var  = w*^T K w* - (S^T K w*)^T (Q + eps_Q I)^{-1} (S^T K w*) / s2
 //!
+//! **Structured K_UU.**  Every kernel family is product-separable, so on the
+//! regular lattice K is a Kronecker-over-dimensions product of per-dimension
+//! g×g symmetric Toeplitz factors ([`KuuOp::Kron`]), applied via FFT
+//! circulant matvecs — the dense m×m matrix is never materialized on the
+//! default path.  `K·U`, `K·wty`, and the predict-path products are operator
+//! matvecs, O(m·g log g) per product instead of O(m²).  The dense operator
+//! ([`KuuOp::Dense`]) survives behind the same interface as the parity-test
+//! oracle and as the fallback for non-separable kernels
+//! ([`NativeBackend::with_dense_kuu`](super::NativeBackend::with_dense_kuu)).
+//!
 //! Theta gradients are analytic for the kernel parameters: writing the MLL
 //! as a function of the lattice covariance K(theta),
 //!
@@ -23,18 +33,31 @@
 //! c = (wty - S b)/s2 makes the three wty/h cross terms a perfect square —
 //! and the second is the standard logdet derivative through the jittered
 //! solve, matching the custom VJPs in linalg_hlo.py which treat jitter and
-//! chol(C) as constants).  Each raw parameter then contracts
-//! G = 1/2 c c^T - P/(2 s2), P = S (Q + eps_Q I)^{-1} S^T, against
-//! dK/dtheta_j from `Kernel::eval_with_grad`.  The noise parameter enters
-//! only through the scalar s2, so its gradient is a central finite
-//! difference over a cheap O(k^3) re-evaluation that reuses every
-//! K-dependent intermediate.
+//! chol(C) as constants).  On the structured path each raw parameter j
+//! enters exactly one dimension's section, so dK/dθ_j is itself a Kronecker
+//! product with that one Toeplitz factor differentiated, and with
+//! Z = S L_Q^{-T} the trace becomes Σ_l z_l^T (dK/dθ_j) z_l — per-dimension
+//! structured contractions, O(k·m·g log g) per parameter instead of the
+//! m²/2 `eval_with_grad` pair loop (which remains the dense-oracle path).
+//! The noise parameter enters only through the scalar s2, so its gradient
+//! is a central finite difference over a cheap O(k^3) re-evaluation that
+//! reuses every K-dependent intermediate.
+//!
+//! **QSystem cache.**  Building the Q-system is the dominant per-call cost
+//! and is a pure function of (theta, caches).  The executor keeps the last
+//! system per artifact family keyed by a fingerprint of exactly those
+//! tensors ([`QCache`]), so a `predict` or `mll` following a `step` with
+//! unchanged theta (fantasization, repeated prediction, chunked query
+//! batches) reuses the factorization instead of rebuilding it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
 use crate::gp::ski::Lattice;
 use crate::kernels::{softplus, Kernel};
-use crate::linalg::{axpy, dot, Cholesky, Mat};
+use crate::linalg::{axpy, dot, Cholesky, KroneckerToeplitz, KuuOp, Mat};
 use crate::runtime::{ArtifactSpec, Tensor};
 
 const LOG_2PI: f64 = 1.8378770664093453;
@@ -133,10 +156,34 @@ fn basis_update(caches: &mut Caches, w: &[f64], r: usize) {
     }
 }
 
+/// K_UU as an operator: Kronecker ⊗ Toeplitz when the kernel factorizes
+/// over dimensions (the default), dense otherwise / when forced (oracle).
+fn build_kuu_op(kernel: &Kernel, theta: &[f64], lattice: &Lattice, force_dense: bool) -> KuuOp {
+    if !force_dense && kernel.is_product_separable() {
+        return KuuOp::Kron(KroneckerToeplitz::new(kernel.kuu_toeplitz_cols(
+            theta,
+            lattice.g,
+            lattice.spacing(),
+        )));
+    }
+    let m = lattice.m();
+    let coords = lattice_coords(lattice);
+    // dense lattice covariance; symmetric, so evaluate one triangle
+    let mut kuu = Mat::zeros(m, m);
+    for i in 0..m {
+        for j in i..m {
+            let v = kernel.eval(theta, &coords[i], &coords[j]);
+            kuu[(i, j)] = v;
+            kuu[(j, i)] = v;
+        }
+    }
+    KuuOp::Dense(kuu)
+}
+
 /// The shared Q-system (model.py:_q_system) over the effective rank.
 struct QSystem {
     s2: f64,
-    kuu: Mat,
+    kuu: KuuOp,
     ke: usize,
     /// S = U_k Ch, m x ke.
     s_mat: Mat,
@@ -149,27 +196,28 @@ struct QSystem {
     /// Ch^T U^T K wty — a = a0/s2 (reused by the noise FD).
     a0: Vec<f64>,
     wty_k_wty: f64,
+    /// K·S (m x ke), memoized on the first predict — step/mll never need
+    /// it, and a cached system serves many predict batches.
+    ks_cell: OnceLock<Mat>,
 }
 
 impl QSystem {
-    fn build(kernel: &Kernel, theta: &[f64], coords: &[Vec<f64>], caches: &Caches) -> Self {
-        let m = caches.u.rows;
+    fn build(
+        kernel: &Kernel,
+        theta: &[f64],
+        lattice: &Lattice,
+        caches: &Caches,
+        force_dense: bool,
+    ) -> Self {
         let r = caches.u.cols;
         let ke = caches.krank.min(r);
         let s2 = kernel.noise_var(theta);
-        // dense lattice covariance; symmetric, so evaluate one triangle
-        let mut kuu = Mat::zeros(m, m);
-        for i in 0..m {
-            for j in i..m {
-                let v = kernel.eval(theta, &coords[i], &coords[j]);
-                kuu[(i, j)] = v;
-                kuu[(j, i)] = v;
-            }
-        }
+        let kuu = build_kuu_op(kernel, theta, lattice, force_dense);
+        let m = kuu.n();
         let u_eff = Mat::from_fn(m, ke, |i, j| caches.u[(i, j)]);
         let c_eff = Mat::from_fn(ke, ke, |i, j| caches.c[(i, j)]);
         let ch = Cholesky::factor_floored(&c_eff, C_JITTER).l;
-        let ku = kuu.matmul(&u_eff); // m x ke
+        let ku = kuu.matmul(&u_eff); // m x ke, structured matvecs
         let t_mat = u_eff.transpose().matmul(&ku); // ke x ke
         let g0 = ch.transpose().matmul(&t_mat.matmul(&ch));
         let qmat = Mat::from_fn(ke, ke, |i, j| {
@@ -182,7 +230,24 @@ impl QSystem {
         let b_vec = cholq.solve(&a);
         let s_mat = u_eff.matmul(&ch);
         let wty_k_wty = dot(&caches.wty, &k_wty);
-        Self { s2, kuu, ke, s_mat, cholq, k_wty, b_vec, g0, a0, wty_k_wty }
+        Self {
+            s2,
+            kuu,
+            ke,
+            s_mat,
+            cholq,
+            k_wty,
+            b_vec,
+            g0,
+            a0,
+            wty_k_wty,
+            ks_cell: OnceLock::new(),
+        }
+    }
+
+    /// K·S, lazily materialized (predict path only).
+    fn ks(&self) -> &Mat {
+        self.ks_cell.get_or_init(|| self.kuu.matmul(&self.s_mat))
     }
 
     /// MLL as a function of s2 only, reusing every K-dependent piece.
@@ -203,15 +268,15 @@ impl QSystem {
         &self,
         kernel: &Kernel,
         theta: &[f64],
-        coords: &[Vec<f64>],
+        lattice: &Lattice,
         caches: &Caches,
     ) -> (f64, Vec<f64>) {
-        let m = self.kuu.rows;
+        let m = self.kuu.n();
         let td = kernel.theta_dim();
         let val = self.mll_at_s2(self.s2, caches.yty, caches.n);
         let mut grad = vec![0.0; td];
 
-        // c = (wty - S b)/s2 and W with rows W_j = (Q + eps)^{-1} S_j
+        // c = (wty - S b)/s2
         let h = self.s_mat.matvec(&self.b_vec);
         let c_vec: Vec<f64> = caches
             .wty
@@ -219,21 +284,60 @@ impl QSystem {
             .zip(&h)
             .map(|(w, hv)| (w - hv) / self.s2)
             .collect();
-        let mut wsol = Mat::zeros(m, self.ke);
-        for j in 0..m {
-            let sol = self.cholq.solve(self.s_mat.row(j));
-            wsol.row_mut(j).copy_from_slice(&sol);
-        }
-        // contract G = 1/2 c c^T - P/(2 s2) against dK/dtheta_j
-        let mut dk = vec![0.0; td];
-        for u in 0..m {
-            for v in u..m {
-                let p_uv = dot(self.s_mat.row(u), wsol.row(v));
-                let g_uv = 0.5 * c_vec[u] * c_vec[v] - p_uv / (2.0 * self.s2);
-                let wgt = if u == v { 1.0 } else { 2.0 };
-                kernel.eval_with_grad(theta, &coords[u], &coords[v], &mut dk);
-                for (gj, dkj) in grad.iter_mut().zip(&dk).take(td - 1) {
-                    *gj += wgt * g_uv * dkj;
+
+        match &self.kuu {
+            KuuOp::Kron(kt) => {
+                // Z = S L_Q^{-T}: Z Z^T = S (Q + eps)^{-1} S^T, so the trace
+                // term is Σ_l z_l^T dK z_l.  Row j of Z solves L z_j = S_j.
+                let mut z = Mat::zeros(m, self.ke);
+                for j in 0..m {
+                    let sol = self.cholq.solve_lower(self.s_mat.row(j));
+                    z.row_mut(j).copy_from_slice(&sol);
+                }
+                let zt = z.transpose(); // ke x m: rows are the z_l columns
+                let hg = lattice.spacing();
+                let g = lattice.g;
+                let mut sgrad = vec![0.0; td];
+                for (j, gj) in grad.iter_mut().enumerate().take(td - 1) {
+                    let axis = kernel
+                        .param_section_dim(j)
+                        .expect("non-noise parameter must map to a lattice dimension");
+                    // dK/dθ_j: the axis factor's column differentiated
+                    let dcol: Vec<f64> = (0..g)
+                        .map(|l| {
+                            kernel.section_with_grad(theta, axis, l as f64 * hg, &mut sgrad);
+                            sgrad[j]
+                        })
+                        .collect();
+                    let dk = kt.with_factor(axis, dcol);
+                    let mut acc = 0.5 * dot(&c_vec, &dk.matvec(&c_vec));
+                    for l in 0..self.ke {
+                        let zl = zt.row(l);
+                        acc -= dot(zl, &dk.matvec(zl)) / (2.0 * self.s2);
+                    }
+                    *gj = acc;
+                }
+            }
+            KuuOp::Dense(_) => {
+                // dense oracle: contract G = 1/2 c c^T - P/(2 s2) against
+                // dK/dθ_j over the m²/2 pairs (the seed path, kept intact)
+                let coords = lattice_coords(lattice);
+                let mut wsol = Mat::zeros(m, self.ke);
+                for j in 0..m {
+                    let sol = self.cholq.solve(self.s_mat.row(j));
+                    wsol.row_mut(j).copy_from_slice(&sol);
+                }
+                let mut dk = vec![0.0; td];
+                for u in 0..m {
+                    for v in u..m {
+                        let p_uv = dot(self.s_mat.row(u), wsol.row(v));
+                        let g_uv = 0.5 * c_vec[u] * c_vec[v] - p_uv / (2.0 * self.s2);
+                        let wgt = if u == v { 1.0 } else { 2.0 };
+                        kernel.eval_with_grad(theta, &coords[u], &coords[v], &mut dk);
+                        for (gj, dkj) in grad.iter_mut().zip(&dk).take(td - 1) {
+                            *gj += wgt * g_uv * dkj;
+                        }
+                    }
                 }
             }
         }
@@ -246,6 +350,99 @@ impl QSystem {
             / (2.0 * NOISE_FD_EPS);
         (val, grad)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Executor-level QSystem memoization.
+// ---------------------------------------------------------------------------
+
+/// Last Q-system per artifact family, keyed by a fingerprint of the exact
+/// (theta, caches) tensors a call receives.  `step` stores the system it
+/// built for its *updated* caches, so the `predict`/`mll` that follows with
+/// unchanged theta (fantasization, chunked queries, evaluation sweeps) hits
+/// instead of rebuilding.  A hit reuses a system built from pre-rounding
+/// f64 cache state — within f32 packing noise (~1e-7 relative) of a cold
+/// rebuild from the rounded tensors, far below every downstream tolerance.
+pub(super) struct QCache {
+    inner: Mutex<HashMap<String, CacheEntry>>,
+}
+
+struct CacheEntry {
+    fp: u64,
+    /// The exact tensors the fingerprint was computed over, compared
+    /// elementwise on a fingerprint match — a 64-bit hash collision can
+    /// therefore never alias two different (theta, caches) states.
+    state: Vec<Tensor>,
+    sys: Arc<QSystem>,
+}
+
+impl QCache {
+    pub(super) fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()) }
+    }
+
+    fn get(&self, key: &str, fp: u64, state: &[Tensor]) -> Option<Arc<QSystem>> {
+        let guard = self.inner.lock().unwrap();
+        guard
+            .get(key)
+            .filter(|e| e.fp == fp && e.state[..] == *state)
+            .map(|e| e.sys.clone())
+    }
+
+    fn put(&self, key: String, fp: u64, state: Vec<Tensor>, sys: Arc<QSystem>) {
+        self.inner.lock().unwrap().insert(key, CacheEntry { fp, state, sys });
+    }
+}
+
+/// FNV-1a over the f32 bit patterns of the given tensors (plus per-tensor
+/// length separators so boundary shifts cannot alias).
+fn fingerprint<'a>(tensors: impl IntoIterator<Item = &'a Tensor>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    for t in tensors {
+        for &v in &t.data {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h ^= (t.data.len() as u64) ^ 0x9e37_79b9_7f4a_7c15;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Cache key: the (kind, d, g, r) family — step/mll/predict variants of one
+/// grid share cache tensors, so they share the memoized system.
+fn family_key(spec: &ArtifactSpec) -> String {
+    let get = |k: &str| spec.meta.get(k).map(String::as_str).unwrap_or("?").to_string();
+    format!(
+        "{}_d{}_g{}_r{}",
+        spec.meta.get("kind").map(String::as_str).unwrap_or("rbf"),
+        get("d"),
+        get("g"),
+        get("r"),
+    )
+}
+
+/// Fetch the memoized system for (theta, caches) or build and memoize it.
+fn get_or_build_system(
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    qc: &QCache,
+    kernel: &Kernel,
+    theta: &[f64],
+    lattice: &Lattice,
+    caches: &Caches,
+    force_dense: bool,
+) -> Arc<QSystem> {
+    let key = family_key(spec);
+    let state = &inputs[0..7];
+    let fp = fingerprint(state);
+    if let Some(sys) = qc.get(&key, fp, state) {
+        return sys;
+    }
+    let sys = Arc::new(QSystem::build(kernel, theta, lattice, caches, force_dense));
+    qc.put(key, fp, state.to_vec(), sys.clone());
+    sys
 }
 
 fn unpack_common(spec: &ArtifactSpec) -> Result<(Kernel, Lattice, usize, usize)> {
@@ -271,44 +468,67 @@ fn theta_f64(t: &Tensor) -> Vec<f64> {
 
 /// `wiski_step_*`: condition on the masked batch, then MLL + grad on the
 /// updated caches (Algorithm 1 ordering).
-pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+pub(super) fn step(
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    qc: &QCache,
+    force_dense: bool,
+) -> Result<Vec<Tensor>> {
     let (kernel, lattice, d, r) = unpack_common(spec)?;
     let q = spec.meta_usize("q")?;
     let m = lattice.m();
     let theta = theta_f64(&inputs[0]);
     let mut caches = Caches::unpack(&inputs[1..7], m, r);
     let (x, y, s, mask) = (&inputs[7], &inputs[8], &inputs[9], &inputs[10]);
+    let mut w = vec![0.0f64; m];
     for i in 0..q {
         if mask.data[i] <= 0.0 {
             continue;
         }
         let pt: Vec<f64> = (0..d).map(|k| x.data[i * d + k] as f64).collect();
         let si = (s.data[i] as f64).max(1e-12);
-        let w: Vec<f64> = lattice.interp_row(&pt).iter().map(|v| v / si).collect();
         let yi = y.data[i] as f64 / si;
+        // sparse interpolation: 4^d taps scattered into the work row
+        w.iter_mut().for_each(|v| *v = 0.0);
+        let taps = lattice.interp_taps(&pt);
+        for &(j, wj) in &taps {
+            w[j] += wj / si;
+        }
         basis_update(&mut caches, &w, r);
-        axpy(yi, &w, &mut caches.wty);
+        for &(j, wj) in &taps {
+            caches.wty[j] += yi * wj / si;
+        }
         caches.yty += yi * yi;
         caches.n += 1.0;
     }
-    let coords = lattice_coords(&lattice);
-    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
-    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &coords, &caches);
+    let sys = QSystem::build(&kernel, &theta, &lattice, &caches, force_dense);
+    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &lattice, &caches);
     let mut out = caches.pack(m, r);
+    // memoize for the predict/mll that typically follows: the key state is
+    // exactly the tensors that call will receive (theta + packed caches)
+    let state: Vec<Tensor> = std::iter::once(inputs[0].clone())
+        .chain(out[0..6].iter().cloned())
+        .collect();
+    let fp = fingerprint(&state);
+    qc.put(family_key(spec), fp, state, Arc::new(sys));
     out.push(Tensor::scalar(val as f32));
     out.push(Tensor::vec1(grad.iter().map(|&v| v as f32).collect()));
     Ok(out)
 }
 
 /// `wiski_mll_*`: MLL + grad on the current caches (refit channel).
-pub(super) fn mll(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+pub(super) fn mll(
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    qc: &QCache,
+    force_dense: bool,
+) -> Result<Vec<Tensor>> {
     let (kernel, lattice, _d, r) = unpack_common(spec)?;
     let m = lattice.m();
     let theta = theta_f64(&inputs[0]);
     let caches = Caches::unpack(&inputs[1..7], m, r);
-    let coords = lattice_coords(&lattice);
-    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
-    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &coords, &caches);
+    let sys = get_or_build_system(spec, inputs, qc, &kernel, &theta, &lattice, &caches, force_dense);
+    let (val, grad) = sys.mll_and_grad(&kernel, &theta, &lattice, &caches);
     Ok(vec![
         Tensor::scalar(val as f32),
         Tensor::vec1(grad.iter().map(|&v| v as f32).collect()),
@@ -316,19 +536,23 @@ pub(super) fn mll(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>>
 }
 
 /// `wiski_predict_*`: posterior marginals at the query batch.
-pub(super) fn predict(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+pub(super) fn predict(
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    qc: &QCache,
+    force_dense: bool,
+) -> Result<Vec<Tensor>> {
     let (kernel, lattice, d, r) = unpack_common(spec)?;
     let b = spec.meta_usize("b")?;
     let m = lattice.m();
     let theta = theta_f64(&inputs[0]);
     let caches = Caches::unpack(&inputs[1..7], m, r);
     let xstar = &inputs[7];
-    let coords = lattice_coords(&lattice);
-    let sys = QSystem::build(&kernel, &theta, &coords, &caches);
+    let sys = get_or_build_system(spec, inputs, qc, &kernel, &theta, &lattice, &caches, force_dense);
 
-    // mean cache = K (wty - S b)/s2
-    let h = sys.s_mat.matvec(&sys.b_vec);
-    let kh = sys.kuu.matvec(&h);
+    // mean cache = K (wty - S b)/s2 = (K wty - (K S) b)/s2
+    let ks = sys.ks();
+    let kh = ks.matvec(&sys.b_vec);
     let mean_cache: Vec<f64> = sys
         .k_wty
         .iter()
@@ -338,21 +562,25 @@ pub(super) fn predict(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tens
 
     let mut mean = vec![0f32; b];
     let mut var = vec![0f32; b];
-    let mut kw = vec![0.0f64; m];
+    let mut a2 = vec![0.0f64; sys.ke];
     for i in 0..b {
         let pt: Vec<f64> = (0..d).map(|k| xstar.data[i * d + k] as f64).collect();
-        let w = lattice.interp_row(&pt);
-        mean[i] = dot(&w, &mean_cache) as f32;
-        // kw = K w, exploiting the 4^d sparsity of w and symmetry of K
-        kw.iter_mut().for_each(|v| *v = 0.0);
-        for (j, &wj) in w.iter().enumerate() {
-            if wj != 0.0 {
-                axpy(wj, sys.kuu.row(j), &mut kw);
+        let taps = lattice.interp_taps(&pt);
+        mean[i] = taps.iter().map(|&(j, wj)| wj * mean_cache[j]).sum::<f64>() as f32;
+        // a2 = S^T K w = (K S)^T w: 4^d sparse combinations of K·S rows
+        a2.iter_mut().for_each(|v| *v = 0.0);
+        for &(j, wj) in &taps {
+            axpy(wj, ks.row(j), &mut a2);
+        }
+        let qs = sys.cholq.solve(&a2);
+        // w^T K w from the operator entries of the 4^d x 4^d tap block
+        let mut wkw = 0.0;
+        for &(j1, w1) in &taps {
+            for &(j2, w2) in &taps {
+                wkw += w1 * w2 * sys.kuu.entry(j1, j2);
             }
         }
-        let a2 = sys.s_mat.matvec_t(&kw);
-        let qs = sys.cholq.solve(&a2);
-        let v = dot(&w, &kw) - dot(&a2, &qs) / sys.s2;
+        let v = wkw - dot(&a2, &qs) / sys.s2;
         var[i] = v.max(1e-10) as f32;
     }
     Ok(vec![
@@ -507,5 +735,84 @@ mod tests {
         let out = last.unwrap();
         assert_eq!(out[5].item(), 8.0, "krank saturates at r");
         assert!(out[6].item().is_finite());
+    }
+
+    #[test]
+    fn qsystem_cache_hit_matches_cold_rebuild() {
+        // predict twice on one backend (second call hits the QCache) and
+        // once on a fresh backend (cold): results must agree to f32 noise.
+        let make_inputs = |seed: u64| {
+            let be = small_backend();
+            let mut caches = zero_cache_inputs(vec![0.4, 0.6, 0.3, -1.2], 64, 64);
+            let mut rng = Rng::new(seed);
+            for _ in 0..10 {
+                let mut ins = caches.clone();
+                ins.push(Tensor::new(
+                    vec![1, 2],
+                    vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+                ));
+                ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+                ins.push(Tensor::vec1(vec![1.0]));
+                ins.push(Tensor::vec1(vec![1.0]));
+                let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+                for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                    *slot = t.clone();
+                }
+            }
+            let mut pins = caches.clone();
+            let mut xs = vec![0f32; 256 * 2];
+            for v in xs.iter_mut() {
+                *v = rng.range(-0.8, 0.8) as f32;
+            }
+            pins.push(Tensor::new(vec![256, 2], xs));
+            (be, pins)
+        };
+        let (warm_be, pins) = make_inputs(31);
+        // warm_be's QCache holds the system stored by the last step
+        let p1 = warm_be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins).unwrap();
+        let p2 = warm_be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins).unwrap();
+        assert_eq!(p1[0].data, p2[0].data, "cache hit must be deterministic");
+        assert_eq!(p1[1].data, p2[1].data);
+        let cold_be = small_backend();
+        let p3 = cold_be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins).unwrap();
+        for (a, b) in p1[0].data.iter().zip(&p3[0].data) {
+            assert!((a - b).abs() < 1e-4, "warm {a} vs cold {b}");
+        }
+        for (a, b) in p1[1].data.iter().zip(&p3[1].data) {
+            assert!((a - b).abs() < 1e-4, "warm var {a} vs cold {b}");
+        }
+    }
+
+    #[test]
+    fn qsystem_cache_is_invalidated_by_theta_change() {
+        let be = small_backend();
+        let mut caches = zero_cache_inputs(vec![0.4, 0.6, 0.3, -1.2], 64, 64);
+        let mut rng = Rng::new(41);
+        for _ in 0..8 {
+            let mut ins = caches.clone();
+            ins.push(Tensor::new(
+                vec![1, 2],
+                vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+            ));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+        }
+        let mut pins = caches.clone();
+        pins.push(Tensor::new(vec![256, 2], vec![0.1f32; 512]));
+        let p1 = be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins).unwrap();
+        // different outputscale must produce different variances, even with
+        // a warm cache for the old theta
+        let mut pins2 = pins.clone();
+        pins2[0].data[2] = 1.3;
+        let p2 = be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins2).unwrap();
+        assert!(
+            (p1[1].data[0] - p2[1].data[0]).abs() > 1e-4,
+            "theta change must invalidate the cached system"
+        );
     }
 }

@@ -35,26 +35,42 @@ impl Lattice {
     }
 
     /// Coordinates of lattice point `idx` (row-major, matching
-    /// kernels/ref.py:lattice_coords).
+    /// kernels/ref.py:lattice_coords): dimension k of point idx is
+    /// `grid1()[(idx / g^{d−1−k}) % g]`.
     pub fn coords(&self, idx: usize) -> Vec<f64> {
+        let grid = self.grid1();
         let mut out = vec![0.0; self.d];
         let mut rem = idx;
-        let h = (self.hi - self.lo) / (self.g - 1) as f64;
         for k in (0..self.d).rev() {
-            let j = rem % self.g;
+            out[k] = grid[rem % self.g];
             rem /= self.g;
-            out[k] = self.lo + h * j as f64;
         }
         out
     }
 
-    /// Dense interpolation row w(x) of length m (exactly 4^d non-zeros).
-    pub fn interp_row(&self, x: &[f64]) -> Vec<f64> {
+    /// Grid spacing h (shared by every dimension).
+    pub fn spacing(&self) -> f64 {
+        (self.hi - self.lo) / (self.g - 1) as f64
+    }
+
+    /// The per-dimension 1-D grid (g uniform points; every dimension shares
+    /// it).  Lattice point `idx` has coordinate `grid1()[i_k]` in dimension
+    /// k, with idx = Σ_k i_k · g^{d−1−k} (dim 0 slowest — the row-major
+    /// order the Kronecker K_UU factors assume).
+    pub fn grid1(&self) -> Vec<f64> {
+        let h = self.spacing();
+        (0..self.g).map(|j| self.lo + h * j as f64).collect()
+    }
+
+    /// Sparse interpolation taps of w(x): exactly 4^d (flat lattice index,
+    /// weight) pairs, the only non-zeros of the cubic-convolution row.
+    /// Hot-path form of [`Lattice::interp_row`] — O(4^d) instead of O(m).
+    pub fn interp_taps(&self, x: &[f64]) -> Vec<(usize, f64)> {
         assert_eq!(x.len(), self.d);
         let g = self.g;
-        let h = (self.hi - self.lo) / (g - 1) as f64;
+        let h = self.spacing();
         // per-dimension taps: (base index, 4 weights)
-        let mut taps: Vec<(usize, [f64; 4])> = Vec::with_capacity(self.d);
+        let mut dim_taps: Vec<(usize, [f64; 4])> = Vec::with_capacity(self.d);
         for k in 0..self.d {
             let mut u = (x[k] - self.lo) / h;
             u = u.clamp(1.0, (g - 2) as f64 - 1e-6);
@@ -63,22 +79,32 @@ impl Lattice {
             for (t, wt) in w.iter_mut().enumerate() {
                 *wt = cubic_kernel(u - (j0 + t) as f64);
             }
-            taps.push((j0, w));
+            dim_taps.push((j0, w));
         }
-        let mut row = vec![0.0; self.m()];
         // tensor product over 4^d combinations
         let combos = 4usize.pow(self.d as u32);
+        let mut taps = Vec::with_capacity(combos);
         for c in 0..combos {
             let mut idx = 0usize;
             let mut weight = 1.0;
             let mut rem = c;
-            for (j0, w) in &taps {
+            for (j0, w) in &dim_taps {
                 let t = rem % 4;
                 rem /= 4;
                 idx = idx * self.g + (j0 + t);
                 weight *= w[t];
             }
-            row[idx] += weight;
+            taps.push((idx, weight));
+        }
+        taps
+    }
+
+    /// Dense interpolation row w(x) of length m (exactly 4^d non-zeros).
+    /// Kept for tests and baselines; hot paths use [`Lattice::interp_taps`].
+    pub fn interp_row(&self, x: &[f64]) -> Vec<f64> {
+        let mut row = vec![0.0; self.m()];
+        for (idx, w) in self.interp_taps(x) {
+            row[idx] += w;
         }
         row
     }
@@ -108,6 +134,40 @@ mod tests {
             let row = lat.interp_row(&[x]);
             let approx: f64 = row.iter().zip(&vals).map(|(w, v)| w * v).sum();
             assert!((approx - (2.0 * x + 0.5)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn interp_taps_matches_dense_row() {
+        let lat = Lattice::new(8, 2);
+        for x in [[0.0, 0.0], [0.3, -0.4], [0.71, 0.13], [-0.97, 0.92]] {
+            let taps = lat.interp_taps(&x);
+            assert_eq!(taps.len(), 16, "4^d taps");
+            let row = lat.interp_row(&x);
+            let mut rebuilt = vec![0.0; lat.m()];
+            for &(idx, w) in &taps {
+                rebuilt[idx] += w;
+            }
+            assert_eq!(rebuilt, row);
+            // indices are unique: each combo addresses a distinct node
+            let mut seen: Vec<usize> = taps.iter().map(|&(i, _)| i).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), taps.len());
+        }
+    }
+
+    #[test]
+    fn grid1_matches_coords_decomposition() {
+        let lat = Lattice::new(5, 2);
+        let grid = lat.grid1();
+        assert_eq!(grid.len(), 5);
+        assert!((lat.spacing() - 0.5).abs() < 1e-12);
+        for idx in 0..lat.m() {
+            let c = lat.coords(idx);
+            let (i0, i1) = (idx / 5, idx % 5);
+            assert_eq!(c[0], grid[i0]);
+            assert_eq!(c[1], grid[i1]);
         }
     }
 

@@ -5,8 +5,10 @@
 //! default, AOT HLO under `--features pjrt`); this struct owns the caches
 //! as host tensors, the theta buffer, the Adam state, the optional input
 //! projection, and the micro-batching of pending observations.  Every call
-//! is O(m^2)-bounded and independent of how many points have been observed
-//! — the paper's headline property, measured end-to-end in benches/fig2.
+//! has fixed cost independent of how many points have been observed — the
+//! paper's headline property, measured end-to-end in benches/fig2.  The
+//! native backend applies K_UU as a Kronecker ⊗ Toeplitz operator, so the
+//! K-dependent work per call is near-linear in m (see backend/native/wiski).
 
 use std::sync::Arc;
 

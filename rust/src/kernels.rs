@@ -5,6 +5,18 @@
 //! parameterization matches covfns.py bit-for-bit in convention (raw
 //! parameters, softplus + 1e-6 floors) so theta buffers are interchangeable
 //! between the artifact path and the native path.
+//!
+//! Every family here is *product-separable*: k(a, b) = Π_k s_k(a_k − b_k)
+//! for 1-D stationary sections s_k (the outputscale is folded into
+//! dimension 0).  That is exactly the property that gives K_UU on a regular
+//! lattice Kronecker ⊗ Toeplitz structure ([`crate::linalg::ops`]), so the
+//! Matern-1/2 family uses the product (L1 / separable) form
+//! os² · exp(−Σ_k |a_k − b_k| / ls_k) — identical to the radial form in
+//! 1-D, and the standard choice for grid-structured GPs in d > 1.  The
+//! [`Kernel::section`] / [`Kernel::section_with_grad`] methods expose the
+//! per-dimension sections; each raw parameter enters exactly one
+//! dimension's section ([`Kernel::param_section_dim`]), which is what makes
+//! dK/dθ a single-factor-derivative Kronecker product.
 
 pub fn softplus(x: f64) -> f64 {
     if x > 30.0 {
@@ -81,13 +93,12 @@ impl Kernel {
             }
             Kernel::Matern12 { dim } => {
                 let os2 = softplus(theta[*dim]) + 1e-6;
-                let mut d2 = 0.0;
+                let mut d1 = 0.0;
                 for k in 0..*dim {
                     let ls = softplus(theta[k]) + 1e-6;
-                    let t = (a[k] - b[k]) / ls;
-                    d2 += t * t;
+                    d1 += (a[k] - b[k]).abs() / ls;
                 }
-                os2 * (-(d2 + 1e-12).sqrt()).exp()
+                os2 * (-d1).exp()
             }
             Kernel::SpectralMixture { q } => {
                 let tau = a[0] - b[0];
@@ -111,6 +122,123 @@ impl Kernel {
         self.eval(theta, x, x)
     }
 
+    /// Input dimensionality (spectral mixture is 1-D here).
+    pub fn input_dim(&self) -> usize {
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => *dim,
+            Kernel::SpectralMixture { .. } => 1,
+        }
+    }
+
+    /// True when k(a, b) = Π_k section(theta, k, a_k − b_k) — the property
+    /// the Kronecker ⊗ Toeplitz K_UU operator requires.  Every current
+    /// family is; a future non-separable kernel returns false here and the
+    /// native backend falls back to the dense K_UU path.
+    pub fn is_product_separable(&self) -> bool {
+        true
+    }
+
+    /// The 1-D stationary section of dimension `axis` at lag `t`:
+    /// k(a, b) = Π_k section(theta, k, a_k − b_k).  The outputscale (and
+    /// the SM mixture weights) are folded into dimension 0.
+    pub fn section(&self, theta: &[f64], axis: usize, t: f64) -> f64 {
+        match self {
+            Kernel::Rbf { dim } => {
+                let ls = softplus(theta[axis]) + 1e-6;
+                let u = t / ls;
+                let f = (-0.5 * u * u).exp();
+                if axis == 0 {
+                    (softplus(theta[*dim]) + 1e-6) * f
+                } else {
+                    f
+                }
+            }
+            Kernel::Matern12 { dim } => {
+                let ls = softplus(theta[axis]) + 1e-6;
+                let f = (-t.abs() / ls).exp();
+                if axis == 0 {
+                    (softplus(theta[*dim]) + 1e-6) * f
+                } else {
+                    f
+                }
+            }
+            Kernel::SpectralMixture { .. } => {
+                debug_assert_eq!(axis, 0, "spectral mixture is 1-D");
+                self.eval(theta, &[t], &[0.0])
+            }
+        }
+    }
+
+    /// Section value together with its gradient w.r.t. every raw theta
+    /// entry.  `grad` must have length `theta_dim()`; only the entries of
+    /// parameters entering this axis' section are non-zero (the noise slot
+    /// never is — it does not touch K).
+    pub fn section_with_grad(&self, theta: &[f64], axis: usize, t: f64, grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.theta_dim());
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
+                let rbf = matches!(self, Kernel::Rbf { .. });
+                let ls = softplus(theta[axis]) + 1e-6;
+                let f = if rbf {
+                    let u = t / ls;
+                    (-0.5 * u * u).exp()
+                } else {
+                    (-t.abs() / ls).exp()
+                };
+                // d f / d raw_ls_axis
+                let dls = if rbf {
+                    f * (t * t) / (ls * ls * ls) * sigmoid(theta[axis])
+                } else {
+                    f * t.abs() / (ls * ls) * sigmoid(theta[axis])
+                };
+                if axis == 0 {
+                    let os2 = softplus(theta[*dim]) + 1e-6;
+                    grad[axis] = os2 * dls;
+                    grad[*dim] = f * sigmoid(theta[*dim]);
+                    os2 * f
+                } else {
+                    grad[axis] = dls;
+                    f
+                }
+            }
+            Kernel::SpectralMixture { .. } => {
+                debug_assert_eq!(axis, 0, "spectral mixture is 1-D");
+                self.eval_with_grad(theta, &[t], &[0.0], grad)
+            }
+        }
+    }
+
+    /// The single lattice dimension whose section raw parameter `j` enters
+    /// (None for the noise slot, which never touches K).  Because each
+    /// parameter touches exactly one dimension, dK/dθ_j is the Kronecker
+    /// product with only that dimension's Toeplitz factor differentiated.
+    pub fn param_section_dim(&self, j: usize) -> Option<usize> {
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
+                if j < *dim {
+                    Some(j)
+                } else if j == *dim {
+                    Some(0) // outputscale folded into dim 0
+                } else {
+                    None // noise
+                }
+            }
+            Kernel::SpectralMixture { q } => (j < 3 * q).then_some(0),
+        }
+    }
+
+    /// Per-dimension first Toeplitz columns of K_UU on a regular grid with
+    /// `g` points and spacing `h`: cols[k][l] = section(theta, k, l·h).
+    /// Feed to [`crate::linalg::KroneckerToeplitz::new`].
+    pub fn kuu_toeplitz_cols(&self, theta: &[f64], g: usize, h: f64) -> Vec<Vec<f64>> {
+        (0..self.input_dim())
+            .map(|k| (0..g).map(|l| self.section(theta, k, l as f64 * h)).collect())
+            .collect()
+    }
+
     /// k(a, b) together with its gradient w.r.t. every *raw* theta entry.
     ///
     /// `grad` must have length `theta_dim()`; the noise slot (last entry)
@@ -127,26 +255,22 @@ impl Kernel {
             Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
                 let dim = *dim;
                 let os2 = softplus(theta[dim]) + 1e-6;
-                let mut d2 = 0.0;
+                let rbf = matches!(self, Kernel::Rbf { .. });
+                let mut expo = 0.0;
                 for k in 0..dim {
                     let ls = softplus(theta[k]) + 1e-6;
                     let t = (a[k] - b[k]) / ls;
-                    d2 += t * t;
+                    expo += if rbf { 0.5 * t * t } else { t.abs() };
                 }
-                let (kval, rho) = if matches!(self, Kernel::Rbf { .. }) {
-                    (os2 * (-0.5 * d2).exp(), 0.0)
-                } else {
-                    let rho = (d2 + 1e-12).sqrt();
-                    (os2 * (-rho).exp(), rho)
-                };
+                let kval = os2 * (-expo).exp();
                 for k in 0..dim {
                     let ls = softplus(theta[k]) + 1e-6;
                     let diff = a[k] - b[k];
-                    // d(-0.5 d2)/dls_k = diff^2/ls^3; matern scales by 1/rho
-                    let shape = if matches!(self, Kernel::Rbf { .. }) {
+                    // d(-expo)/dls_k: diff^2/ls^3 (rbf) or |diff|/ls^2 (matern)
+                    let shape = if rbf {
                         diff * diff / (ls * ls * ls)
                     } else {
-                        diff * diff / (ls * ls * ls * rho)
+                        diff.abs() / (ls * ls)
                     };
                     grad[k] = kval * shape * sigmoid(theta[k]);
                 }
@@ -275,6 +399,88 @@ mod tests {
             }
             // the noise slot never enters k(a, b)
             assert_eq!(grad[kernel.theta_dim() - 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn section_product_reproduces_eval() {
+        let cases: Vec<(Kernel, Vec<f64>, Vec<f64>)> = vec![
+            (Kernel::Rbf { dim: 3 }, vec![0.3, -0.2, 0.6], vec![-0.1, 0.4, 0.2]),
+            (Kernel::Matern12 { dim: 3 }, vec![0.3, -0.2, 0.6], vec![-0.1, 0.4, 0.2]),
+            (Kernel::SpectralMixture { q: 2 }, vec![0.15], vec![-0.35]),
+        ];
+        for (kernel, a, b) in cases {
+            assert!(kernel.is_product_separable());
+            let theta = kernel.default_theta(0.2);
+            let mut prod = 1.0;
+            for k in 0..kernel.input_dim() {
+                prod *= kernel.section(&theta, k, a[k] - b[k]);
+            }
+            let direct = kernel.eval(&theta, &a, &b);
+            assert!(
+                (prod - direct).abs() < 1e-12 * (1.0 + direct.abs()),
+                "{kernel:?}: sections {prod} vs eval {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn section_grad_matches_finite_differences() {
+        for kernel in [
+            Kernel::Rbf { dim: 2 },
+            Kernel::Matern12 { dim: 2 },
+            Kernel::SpectralMixture { q: 2 },
+        ] {
+            let theta = kernel.default_theta(0.2);
+            let td = kernel.theta_dim();
+            let mut grad = vec![0.0; td];
+            for axis in 0..kernel.input_dim() {
+                let t = 0.37;
+                kernel.section_with_grad(&theta, axis, t, &mut grad);
+                let eps = 1e-6;
+                for j in 0..td {
+                    let mut tp = theta.clone();
+                    let mut tm = theta.clone();
+                    tp[j] += eps;
+                    tm[j] -= eps;
+                    let fd = (kernel.section(&tp, axis, t) - kernel.section(&tm, axis, t))
+                        / (2.0 * eps);
+                    assert!(
+                        (grad[j] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                        "{kernel:?} axis {axis} param {j}: {} vs fd {fd}",
+                        grad[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn param_section_dim_covers_every_non_noise_param() {
+        let k = Kernel::Rbf { dim: 3 };
+        assert_eq!(k.param_section_dim(0), Some(0));
+        assert_eq!(k.param_section_dim(2), Some(2));
+        assert_eq!(k.param_section_dim(3), Some(0)); // outputscale -> dim 0
+        assert_eq!(k.param_section_dim(4), None); // noise
+        let sm = Kernel::SpectralMixture { q: 4 };
+        for j in 0..12 {
+            assert_eq!(sm.param_section_dim(j), Some(0));
+        }
+        assert_eq!(sm.param_section_dim(12), None);
+    }
+
+    #[test]
+    fn kuu_toeplitz_cols_are_sections_at_grid_lags() {
+        let k = Kernel::Matern12 { dim: 2 };
+        let theta = k.default_theta(0.2);
+        let (g, h) = (7usize, 0.25);
+        let cols = k.kuu_toeplitz_cols(&theta, g, h);
+        assert_eq!(cols.len(), 2);
+        for (axis, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), g);
+            for (l, v) in col.iter().enumerate() {
+                assert_eq!(*v, k.section(&theta, axis, l as f64 * h));
+            }
         }
     }
 

@@ -105,7 +105,8 @@ impl Mat {
         self.rows += 1;
     }
 
-    /// Frobenius-norm distance to another matrix (test helper).
+    /// Maximum absolute elementwise difference to another matrix (test
+    /// helper).
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data

@@ -1,16 +1,24 @@
-//! Dense linear-algebra substrate.
+//! Linear-algebra substrate: dense kernels plus structured K_UU operators.
 //!
 //! Nothing beyond the vendored crate set is available offline (no nalgebra /
 //! ndarray), so the pure-Rust baselines (exact GP, local GPs, O-SGPR) and
 //! all verification paths are built on this module: a row-major `Mat`,
 //! Cholesky factorization with low-rank updates, triangular solves,
 //! conjugate gradients, Lanczos, and an FFT-based Toeplitz matvec.
+//!
+//! On top of the dense substrate sits the operator hierarchy in [`ops`]:
+//! [`KuuOp`] abstracts the lattice covariance as either an explicit matrix
+//! (`Dense` — the parity-test oracle and non-lattice fallback) or a
+//! Kronecker-over-dimensions product of per-dimension symmetric Toeplitz
+//! factors (`Kron` — the default WISKI path, applied in O(d · m log g) via
+//! [`ToeplitzMatvec`] without ever materializing the m×m matrix).
 
 mod cg;
 mod chol;
 mod fft;
 mod lanczos;
 mod mat;
+pub mod ops;
 mod toeplitz;
 
 pub use cg::{cg_solve, CgOptions};
@@ -18,6 +26,7 @@ pub use chol::Cholesky;
 pub use fft::{fft_inplace, ifft_inplace};
 pub use lanczos::{lanczos, LanczosResult};
 pub use mat::Mat;
+pub use ops::{KroneckerToeplitz, KuuOp};
 pub use toeplitz::ToeplitzMatvec;
 
 /// Dot product.

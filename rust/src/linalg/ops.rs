@@ -1,0 +1,237 @@
+//! Structured linear operators over the lattice covariance K_UU.
+//!
+//! A stationary product kernel on a regular lattice has Kronecker-over-
+//! dimensions structure with a symmetric Toeplitz factor per dimension
+//! (KISS-GP, Wilson & Nickisch 2015): K_UU = T_0 ⊗ T_1 ⊗ ... ⊗ T_{d-1},
+//! dim 0 slowest-varying (row-major lattice index order).  [`KuuOp`] is the
+//! operator abstraction the native WISKI backend computes through:
+//!
+//! - [`KuuOp::Kron`] applies each g×g factor along its tensor mode via the
+//!   FFT circulant matvec ([`ToeplitzMatvec`]), so a full K·v costs
+//!   O(d · m log g) instead of the O(m²) dense product — and K itself is
+//!   never materialized.
+//! - [`KuuOp::Dense`] keeps the explicit m×m matrix.  It survives as the
+//!   parity-test oracle and as the fallback for kernels that are not
+//!   product-separable or inducing sets that are not regular lattices.
+
+use super::{Mat, ToeplitzMatvec};
+
+/// The lattice covariance as a linear operator (see module docs).
+pub enum KuuOp {
+    /// Explicit m×m matrix — test oracle / non-lattice fallback.
+    Dense(Mat),
+    /// Kronecker product of per-dimension symmetric Toeplitz factors.
+    Kron(KroneckerToeplitz),
+}
+
+impl KuuOp {
+    /// Operator dimension m.
+    pub fn n(&self) -> usize {
+        match self {
+            KuuOp::Dense(m) => m.rows,
+            KuuOp::Kron(k) => k.n(),
+        }
+    }
+
+    /// True when the structured (never-materialized) path is active.
+    pub fn is_structured(&self) -> bool {
+        matches!(self, KuuOp::Kron(_))
+    }
+
+    /// K · v.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        match self {
+            KuuOp::Dense(m) => m.matvec(v),
+            KuuOp::Kron(k) => k.matvec(v),
+        }
+    }
+
+    /// K · B, column by column for the structured variant.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        match self {
+            KuuOp::Dense(m) => m.matmul(b),
+            KuuOp::Kron(k) => {
+                let n = k.n();
+                assert_eq!(b.rows, n);
+                let mut out = Mat::zeros(n, b.cols);
+                let mut col = vec![0.0; n];
+                for j in 0..b.cols {
+                    for i in 0..n {
+                        col[i] = b[(i, j)];
+                    }
+                    let kc = k.matvec(&col);
+                    for i in 0..n {
+                        out[(i, j)] = kc[i];
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Single entry K[i, j] — O(1) dense, O(d) structured.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        match self {
+            KuuOp::Dense(m) => m[(i, j)],
+            KuuOp::Kron(k) => k.entry(i, j),
+        }
+    }
+
+    /// Materialize the operator — O(m²); tests and diagnostics only.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            KuuOp::Dense(m) => m.clone(),
+            KuuOp::Kron(k) => k.to_dense(),
+        }
+    }
+}
+
+/// ⊗_k T_k with symmetric-Toeplitz factors applied via circulant FFTs.
+#[derive(Clone)]
+pub struct KroneckerToeplitz {
+    factors: Vec<ToeplitzMatvec>,
+    /// First columns of the factors (kept for `to_dense` / `with_factor`).
+    cols: Vec<Vec<f64>>,
+    sizes: Vec<usize>,
+    m: usize,
+}
+
+impl KroneckerToeplitz {
+    /// Build from per-dimension first columns, slowest-varying dim first.
+    pub fn new(cols: Vec<Vec<f64>>) -> Self {
+        assert!(!cols.is_empty(), "KroneckerToeplitz needs >= 1 factor");
+        let sizes: Vec<usize> = cols.iter().map(Vec::len).collect();
+        let m = sizes.iter().product();
+        let factors = cols.iter().map(|c| ToeplitzMatvec::new(c)).collect();
+        Self { factors, cols, sizes, m }
+    }
+
+    pub fn n(&self) -> usize {
+        self.m
+    }
+
+    /// A copy of the operator with the `axis`-th factor's first column
+    /// replaced — the shape of dK/dθ for a product kernel, where exactly
+    /// one per-dimension factor is differentiated.
+    pub fn with_factor(&self, axis: usize, col: Vec<f64>) -> Self {
+        assert_eq!(col.len(), self.sizes[axis]);
+        let mut out = self.clone();
+        out.factors[axis] = ToeplitzMatvec::new(&col);
+        out.cols[axis] = col;
+        out
+    }
+
+    /// (⊗_k T_k) v by applying each factor along its tensor mode: for mode
+    /// k every length-g fiber (stride = product of the trailing sizes) goes
+    /// through one FFT matvec — O(Σ_k m log g_k) total.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        if self.factors.len() == 1 {
+            return self.factors[0].matvec(v);
+        }
+        let mut x = v.to_vec();
+        let mut stride = self.m;
+        let mut outer = 1usize;
+        for (k, t) in self.factors.iter().enumerate() {
+            let nk = self.sizes[k];
+            stride /= nk;
+            let mut y = vec![0.0; self.m];
+            let mut fiber = vec![0.0; nk];
+            for o in 0..outer {
+                let base = o * nk * stride;
+                for s in 0..stride {
+                    for (j, f) in fiber.iter_mut().enumerate() {
+                        *f = x[base + j * stride + s];
+                    }
+                    let tv = t.matvec(&fiber);
+                    for (j, val) in tv.iter().enumerate() {
+                        y[base + j * stride + s] = *val;
+                    }
+                }
+            }
+            x = y;
+            outer *= nk;
+        }
+        x
+    }
+
+    /// Single entry K[i, j] = Π_k cols[k][|i_k − j_k|], O(d).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        let (mut ri, mut rj, mut v) = (i, j, 1.0);
+        for k in (0..self.factors.len()).rev() {
+            let nk = self.sizes[k];
+            v *= self.cols[k][(ri % nk).abs_diff(rj % nk)];
+            ri /= nk;
+            rj /= nk;
+        }
+        v
+    }
+
+    /// Materialize: entry (i, j) = Π_k cols[k][|i_k − j_k|].
+    pub fn to_dense(&self) -> Mat {
+        Mat::from_fn(self.m, self.m, |i, j| self.entry(i, j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_cols(sizes: &[usize], seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        sizes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn kron_matvec_matches_dense_product() {
+        for sizes in [vec![5usize], vec![4, 3], vec![3, 4, 5], vec![4, 4, 4]] {
+            let kt = KroneckerToeplitz::new(random_cols(&sizes, 11));
+            let dense = kt.to_dense();
+            let mut rng = Rng::new(12);
+            let v: Vec<f64> = (0..kt.n()).map(|_| rng.normal()).collect();
+            let fast = kt.matvec(&v);
+            let slow = dense.matvec(&v);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-10, "sizes {sizes:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kuuop_matmul_and_entry_agree_across_variants() {
+        let kt = KroneckerToeplitz::new(random_cols(&[4, 5], 21));
+        let dense = KuuOp::Dense(kt.to_dense());
+        let op = KuuOp::Kron(kt);
+        assert!(op.is_structured() && !dense.is_structured());
+        let mut rng = Rng::new(22);
+        let b = Mat::from_fn(op.n(), 3, |_, _| rng.normal());
+        let d1 = op.matmul(&b);
+        let d2 = dense.matmul(&b);
+        assert!(d1.max_abs_diff(&d2) < 1e-10);
+        for (i, j) in [(0usize, 0usize), (2, 9), (13, 5), (19, 19)] {
+            assert!((op.entry(i, j) - dense.entry(i, j)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn with_factor_swaps_one_dimension() {
+        let kt = KroneckerToeplitz::new(random_cols(&[3, 4], 31));
+        let mut rng = Rng::new(32);
+        let newcol: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let swapped = kt.with_factor(1, newcol.clone());
+        let d = swapped.to_dense();
+        // entry (i, j) must use the new column along dim 1 only
+        for i in 0..12 {
+            for j in 0..12 {
+                let lag0 = (i / 4).abs_diff(j / 4);
+                let lag1 = (i % 4).abs_diff(j % 4);
+                let expect = kt.cols[0][lag0] * newcol[lag1];
+                assert!((d[(i, j)] - expect).abs() < 1e-9, "{lag0} {lag1}");
+            }
+        }
+    }
+}

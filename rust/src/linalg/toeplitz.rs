@@ -6,6 +6,7 @@
 use super::{fft_inplace, ifft_inplace};
 
 /// Precomputed circulant spectrum for fast symmetric-Toeplitz matvecs.
+#[derive(Clone)]
 pub struct ToeplitzMatvec {
     n: usize,
     /// FFT length (next pow2 >= 2n-1, padded).

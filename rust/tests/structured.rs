@@ -1,0 +1,154 @@
+//! Structured-K_UU acceptance suite: the Kronecker ⊗ Toeplitz operator must
+//! be numerically indistinguishable from the dense lattice covariance, and
+//! the whole step/mll/predict vertical slice must agree between the
+//! structured default path and the dense oracle path
+//! (`NativeBackend::with_dense_kuu`).
+
+use wiski::backend::{Executor, NativeBackend};
+use wiski::gp::ski::Lattice;
+use wiski::kernels::Kernel;
+use wiski::linalg::{KroneckerToeplitz, Mat};
+use wiski::rng::Rng;
+use wiski::runtime::Tensor;
+
+/// Random raw theta near the defaults (stays in the well-conditioned zone).
+fn random_theta(kernel: &Kernel, rng: &mut Rng) -> Vec<f64> {
+    kernel
+        .default_theta(0.2)
+        .iter()
+        .map(|t| t + 0.4 * rng.normal())
+        .collect()
+}
+
+/// ISSUE-2 property test: for every kernel family, random theta, and
+/// g ∈ {4, 8, 16}, d ∈ {1, 2, 3} (d = 1 for the 1-D spectral mixture), the
+/// structured matvec matches the dense K_UU matvec to 1e-10.
+#[test]
+fn kron_toeplitz_matvec_matches_dense_kuu_property() {
+    let mut rng = Rng::new(2024);
+    let mut cases: Vec<Kernel> = vec![Kernel::SpectralMixture { q: 4 }];
+    for d in 1..=3usize {
+        cases.push(Kernel::Rbf { dim: d });
+        cases.push(Kernel::Matern12 { dim: d });
+    }
+    for kernel in cases {
+        let d = kernel.input_dim();
+        for g in [4usize, 8, 16] {
+            let lat = Lattice::new(g, d);
+            let m = lat.m();
+            let theta = random_theta(&kernel, &mut rng);
+            let kt = KroneckerToeplitz::new(kernel.kuu_toeplitz_cols(&theta, g, lat.spacing()));
+            assert_eq!(kt.n(), m);
+            let coords: Vec<Vec<f64>> = (0..m).map(|i| lat.coords(i)).collect();
+            let dense = Mat::from_fn(m, m, |i, j| kernel.eval(&theta, &coords[i], &coords[j]));
+            // entries agree where cheap to check exhaustively
+            if m <= 1024 {
+                for i in 0..m {
+                    for j in 0..m {
+                        let e = kt.entry(i, j);
+                        assert!(
+                            (e - dense[(i, j)]).abs() < 1e-12,
+                            "{kernel:?} g={g}: entry ({i},{j}) {e} vs {}",
+                            dense[(i, j)]
+                        );
+                    }
+                }
+            }
+            // FFT matvec vs dense matvec on a random vector
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let fast = kt.matvec(&v);
+            let slow = dense.matvec(&v);
+            for (idx, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-10,
+                    "{kernel:?} g={g} d={d} idx {idx}: structured {a} vs dense {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Pair of backends over the same tiny registry: structured default and the
+/// dense oracle.
+fn backend_pair(kind: &str, d: usize, g: usize, r: usize) -> (NativeBackend, NativeBackend) {
+    let mut s = NativeBackend::empty();
+    s.add_wiski_family(kind, d, g, r, 1, 32, true);
+    let mut dense = NativeBackend::empty();
+    dense.add_wiski_family(kind, d, g, r, 1, 32, true);
+    let dense = dense.with_dense_kuu();
+    assert!(!s.dense_kuu_forced() && dense.dense_kuu_forced());
+    (s, dense)
+}
+
+fn zero_caches(theta: &[f64], m: usize, r: usize) -> Vec<Tensor> {
+    vec![
+        Tensor::vec1(theta.iter().map(|&v| v as f32).collect()),
+        Tensor::zeros(&[m]),
+        Tensor::scalar(0.0),
+        Tensor::scalar(0.0),
+        Tensor::zeros(&[m, r]),
+        Tensor::zeros(&[r, r]),
+        Tensor::scalar(0.0),
+    ]
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f64, what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let (x, y) = (*x as f64, *y as f64);
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: structured {x} vs dense {y}"
+        );
+    }
+}
+
+/// ISSUE-2 parity test: step/mll/predict outputs of the structured path
+/// match the dense oracle bit-for-close over a 30-point stream, for each
+/// kernel family.
+#[test]
+fn structured_step_mll_predict_match_dense_oracle() {
+    for (kind, d, g, r) in [("rbf", 2usize, 8usize, 64usize), ("matern12", 2, 8, 64), ("sm4", 1, 16, 16)] {
+        let (sb, db) = backend_pair(kind, d, g, r);
+        let kernel = Kernel::from_kind(kind, d);
+        let m = g.pow(d as u32);
+        let theta: Vec<f64> = kernel.default_theta(0.2);
+        let step_name = format!("wiski_step_{kind}_d{d}_g{g}_r{r}_q1");
+        let mll_name = format!("wiski_mll_{kind}_d{d}_g{g}_r{r}");
+        let pred_name = format!("wiski_predict_{kind}_d{d}_g{g}_r{r}_b32");
+        let mut caches = zero_caches(&theta, m, r);
+        let mut rng = Rng::new(77);
+        for stepno in 0..30 {
+            let mut ins = caches.clone();
+            let pt: Vec<f32> = (0..d).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+            ins.push(Tensor::new(vec![1, d], pt));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            let so = sb.exec(&step_name, &ins).unwrap();
+            let po = db.exec(&step_name, &ins).unwrap();
+            // cache updates never touch K_UU: bitwise identical
+            for (a, b) in so[0..6].iter().zip(&po[0..6]) {
+                assert_eq!(a.data, b.data, "{kind} step {stepno}: cache drift");
+            }
+            assert_close(&so[6].data, &po[6].data, 2e-4, &format!("{kind} step {stepno} mll"));
+            assert_close(&so[7].data, &po[7].data, 2e-4, &format!("{kind} step {stepno} grad"));
+            for (slot, t) in caches[1..7].iter_mut().zip(so[0..6].iter()) {
+                *slot = t.clone();
+            }
+            if (stepno + 1) % 10 == 0 {
+                let sm = sb.exec(&mll_name, &caches).unwrap();
+                let dm = db.exec(&mll_name, &caches).unwrap();
+                assert_close(&sm[0].data, &dm[0].data, 2e-4, &format!("{kind} mll value"));
+                assert_close(&sm[1].data, &dm[1].data, 2e-4, &format!("{kind} mll grad"));
+                let mut pins = caches.clone();
+                let xs: Vec<f32> = (0..32 * d).map(|_| rng.range(-0.8, 0.8) as f32).collect();
+                pins.push(Tensor::new(vec![32, d], xs));
+                let sp = sb.exec(&pred_name, &pins).unwrap();
+                let dp = db.exec(&pred_name, &pins).unwrap();
+                assert_close(&sp[0].data, &dp[0].data, 2e-4, &format!("{kind} predict mean"));
+                assert_close(&sp[1].data, &dp[1].data, 2e-4, &format!("{kind} predict var"));
+                assert_eq!(sp[2].data, dp[2].data, "{kind} sig2 passthrough");
+            }
+        }
+    }
+}
