@@ -17,6 +17,43 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== telemetry smoke: serve with WISKI_TRACE=json =="
+# One short serve round with JSON tracing on: the emitted lines must parse
+# as JSON and contain every span/counter family the telemetry layer wires
+# through the stack (executor decorator, QSystem phases, QCache, server).
+trace_tmp=$(mktemp)
+trap 'rm -f "$trace_tmp"' EXIT
+WISKI_TRACE=json ./target/release/wiski serve --stream 64 >/dev/null 2> "$trace_tmp"
+if ! [ -s "$trace_tmp" ]; then
+    echo "ci.sh: WISKI_TRACE=json serve emitted no telemetry" >&2
+    exit 1
+fi
+for name in exec.wiski_step exec.wiski_predict qsystem.build kuu.matvec \
+            server.observe_batch server.predict qcache.hit qcache.miss \
+            '"type":"snapshot"'; do
+    if ! grep -qF "$name" "$trace_tmp"; then
+        echo "ci.sh: telemetry output missing '$name'" >&2
+        exit 1
+    fi
+done
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$trace_tmp" <<'PYEOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    lines = [l for l in (raw.strip() for raw in f) if l]
+for i, line in enumerate(lines, 1):
+    try:
+        obj = json.loads(line)
+    except ValueError as e:
+        sys.exit(f"ci.sh: telemetry line {i} is not valid JSON ({e}): {line[:120]}")
+    if obj.get("type") not in ("span", "counter", "snapshot"):
+        sys.exit(f"ci.sh: telemetry line {i} has unexpected type {obj.get('type')!r}")
+print(f"telemetry smoke: {len(lines)} JSON lines validated")
+PYEOF
+else
+    echo "(python3 not available: skipping strict JSON validation)"
+fi
+
 echo "== structured-vs-dense K_UU parity (explicit) =="
 # The Kronecker/Toeplitz operator suite is the guard against silent numeric
 # drift between the structured default path and the dense oracle; run it by

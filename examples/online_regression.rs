@@ -120,11 +120,12 @@ fn main() -> anyhow::Result<()> {
 
     let stats = h.flush()?;
     println!(
-        "\nfinal: observed={} batches={} mean_observe={:.0}us mean_predict={:.0}us",
+        "\nfinal: observed={} batches={} mean_observe={:.0}us p95_observe={:.0}us mean_predict={:.0}us",
         stats.observed,
         stats.observe_batches,
         stats.mean_observe_us(),
-        stats.predict_time_us / stats.predicts.max(1) as f64,
+        stats.p95_observe_us(),
+        stats.mean_predict_us(),
     );
     let pw = h.predict(test.x.clone())?;
     let (r, n) = eval(&pw, "wiski");

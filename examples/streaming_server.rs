@@ -53,7 +53,13 @@ fn main() -> anyhow::Result<()> {
         stats.predicts,
         t0.elapsed()
     );
-    println!("mean observe batch latency: {:.0}us", stats.mean_observe_us());
+    println!(
+        "observe batch latency: mean {:.0}us p50 {:.0}us p95 {:.0}us (max queue depth {})",
+        stats.mean_observe_us(),
+        stats.p50_observe_us(),
+        stats.p95_observe_us(),
+        stats.max_queue_depth
+    );
     server.shutdown();
     Ok(())
 }

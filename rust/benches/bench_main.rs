@@ -498,8 +498,12 @@ fn ablation_steps(rt: &Arc<dyn Executor>) {
 
 /// Dense vs structured (Kronecker ⊗ Toeplitz) K_UU through the native
 /// backend: per-step cost (QSystem build + theta-gradient contraction) and
-/// predict cost, at g ∈ {16, 32, 64}, d = 2.  Results go to stdout and to
-/// BENCH_wiski_kuu.json at the repo root so the perf trajectory accumulates.
+/// predict cost, at g ∈ {16, 32, 64}, d = 2.  Also streams 1440 points
+/// through the fully instrumented stack and records per-step latency
+/// histograms at n ∈ {144, 576, 1440} — machine-checkable evidence of the
+/// paper's O(1) update claim (p95 must stay flat as n grows 10x).  Results
+/// go to stdout and to BENCH_wiski_kuu.json at the repo root (rows +
+/// `telemetry` snapshot) so the perf trajectory accumulates.
 fn wiski_kuu(_rt: &Arc<dyn Executor>) {
     use wiski::runtime::Tensor;
 
@@ -607,11 +611,91 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
              \"predict_speedup\": {su_pred:.2}, \"predict_warm_structured_ms\": {pred_warm:.3}}}"
         ));
     }
+    // --- O(1) claim: per-step latency vs n through the instrumented stack --
+    // Stream 1440 points (g=16, r=64: krank saturates after ~64 steps) and
+    // time 64-step windows ending at n = 144, 576, 1440.  The histogram is
+    // the embedded evidence; the flat-ratio verdict uses exact sample
+    // percentiles (log₂ bucket midpoints quantize adjacent buckets to a
+    // ratio of exactly 2, right at the acceptance threshold).
+    use wiski::backend::InstrumentedExecutor;
+    use wiski::metrics::Timings;
+    use wiski::telemetry::{self, HistSnapshot};
+
+    let be: Arc<dyn Executor> = InstrumentedExecutor::wrap(Arc::new(NativeBackend::new()));
+    let cfg = WiskiConfig { g: 16, r: 64, ..WiskiConfig::default() };
+    let mut model = Wiski::new(be, cfg, Projection::identity(2)).unwrap();
+    let mut rng = wiski::rng::Rng::new(21);
+    let checkpoints = [144usize, 576, 1440];
+    let window = 64usize;
+    let mut series: Vec<(usize, HistSnapshot, Timings)> = Vec::new();
+    let mut hist = HistSnapshot::default();
+    let mut exact = Timings::default();
+    for i in 1..=*checkpoints.last().unwrap() {
+        let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+        let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+        let timed = checkpoints.iter().any(|&c| i + window > c && i <= c);
+        if timed {
+            let t0 = Instant::now();
+            model.observe(&x, y).unwrap();
+            let dt = t0.elapsed();
+            hist.record(dt);
+            exact.push(dt);
+            if checkpoints.contains(&i) {
+                series.push((i, hist.clone(), exact.clone()));
+                hist = HistSnapshot::default();
+                exact = Timings::default();
+            }
+        } else {
+            model.observe(&x, y).unwrap();
+        }
+    }
+    println!("\n  per-step latency vs n (instrumented stack, g=16 r=64, 64-step windows):");
+    println!("      n     mean_us     p50_us     p95_us     p99_us");
+    for (n, h, t) in &series {
+        println!(
+            "  {n:>5} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+            h.mean_us(),
+            t.percentile_us(50.0),
+            t.percentile_us(95.0),
+            t.percentile_us(99.0)
+        );
+    }
+    let p95_first = series.first().unwrap().2.percentile_us(95.0).max(1e-9);
+    let p95_last = series.last().unwrap().2.percentile_us(95.0);
+    let p95_flat_ratio = p95_last / p95_first;
+    let o1_claim_held = p95_flat_ratio < 2.0;
+    println!(
+        "  p95 ratio (n={} vs n={}): {p95_flat_ratio:.2}x -> O(1) claim {}",
+        series.last().unwrap().0,
+        series.first().unwrap().0,
+        if o1_claim_held { "HELD" } else { "VIOLATED" }
+    );
+    let series_json: Vec<String> = series
+        .iter()
+        .map(|(n, h, t)| {
+            format!(
+                "      {{\"n\": {n}, \"hist\": {}, \"exact_p50_us\": {:.1}, \"exact_p95_us\": {:.1}}}",
+                h.json_obj(),
+                t.percentile_us(50.0),
+                t.percentile_us(95.0)
+            )
+        })
+        .collect();
+    let telemetry_json = format!(
+        "{{\n    \"step_latency_vs_n\": [\n{}\n    ],\n    \"p95_flat_ratio\": {p95_flat_ratio:.3},\n    \
+         \"o1_claim_held\": {o1_claim_held},\n    \"registry\": {}\n  }}",
+        series_json.join(",\n"),
+        telemetry::snapshot().to_json()
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"wiski_kuu\",\n  \"d\": 2,\n  \"unit\": \"ms\",\n  \
          \"note\": \"step = QSystem build + theta-grad contraction (q=1); predict = 256-query batch; \
-         warm = QSystem cache hit; produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ]\n}}\n",
-        rows_json.join(",\n")
+         warm = QSystem cache hit; telemetry.step_latency_vs_n = 64-step windows through the \
+         instrumented stack (g=16 r=64); produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ],\n  \
+         \"telemetry\": {}\n}}\n",
+        rows_json.join(",\n"),
+        telemetry_json
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wiski_kuu.json");
     match std::fs::write(path, &json) {

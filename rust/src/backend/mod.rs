@@ -78,6 +78,66 @@ impl Executor for crate::runtime::Runtime {
     }
 }
 
+/// First two underscore-separated components of an artifact name: the
+/// *family* used for telemetry span labels, so every size variant of one
+/// operation shares a histogram ("wiski_step_rbf_d2_g16_r128_q1" and
+/// "wiski_step_sm4_d1_g128_r64_q1" both land in `exec.wiski_step`).
+pub fn artifact_family(name: &str) -> &str {
+    let mut underscores = 0;
+    for (i, b) in name.bytes().enumerate() {
+        if b == b'_' {
+            underscores += 1;
+            if underscores == 2 {
+                return &name[..i];
+            }
+        }
+    }
+    name
+}
+
+/// Telemetry decorator: wraps any [`Executor`] and times every `exec` call
+/// into the `exec.<family>` span histogram, counting failures under
+/// `exec.errors`.  Backends need no instrumentation of their own — the
+/// native engine and a future PJRT runtime are traced identically.
+pub struct InstrumentedExecutor {
+    inner: Arc<dyn Executor>,
+}
+
+impl InstrumentedExecutor {
+    /// Wrap `inner`; the result is itself an `Arc<dyn Executor>` so models
+    /// and the coordinator are oblivious to the decoration.
+    pub fn wrap(inner: Arc<dyn Executor>) -> Arc<dyn Executor> {
+        Arc::new(InstrumentedExecutor { inner })
+    }
+}
+
+impl Executor for InstrumentedExecutor {
+    fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn exec(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let _span = crate::telemetry::span(&format!("exec.{}", artifact_family(name)));
+        let out = self.inner.exec(name, inputs);
+        if out.is_err() {
+            crate::telemetry::count("exec.errors", 1);
+        }
+        out
+    }
+
+    fn prepare(&self, name: &str) -> Result<()> {
+        self.inner.prepare(name)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.inner.spec(name)
+    }
+}
+
 /// Backend selection for binaries/examples: the native backend unless the
 /// `WISKI_BACKEND=pjrt` environment variable (or an explicit caller choice)
 /// asks for the artifact runner.
@@ -102,10 +162,12 @@ pub fn backend_by_name(name: &str, artifacts_dir: &str) -> Result<Arc<dyn Execut
             if matches!(std::env::var("WISKI_KUU").as_deref(), Ok("dense")) {
                 be = be.with_dense_kuu();
             }
-            Ok(Arc::new(be))
+            Ok(InstrumentedExecutor::wrap(Arc::new(be)))
         }
         #[cfg(feature = "pjrt")]
-        "pjrt" => Ok(Arc::new(crate::runtime::Runtime::new(artifacts_dir)?)),
+        "pjrt" => Ok(InstrumentedExecutor::wrap(Arc::new(
+            crate::runtime::Runtime::new(artifacts_dir)?,
+        ))),
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => {
             let _ = artifacts_dir;
@@ -115,5 +177,38 @@ pub fn backend_by_name(name: &str, artifacts_dir: &str) -> Result<Arc<dyn Execut
             ))
         }
         other => Err(anyhow!("unknown backend {other:?}; use native|pjrt")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry;
+
+    #[test]
+    fn artifact_family_truncates_at_second_underscore() {
+        assert_eq!(artifact_family("wiski_step_rbf_d2_g16_r128_q1"), "wiski_step");
+        assert_eq!(artifact_family("osvgp_predict_rbf_d2_m256_b256"), "osvgp_predict");
+        assert_eq!(artifact_family("wiski_mll"), "wiski_mll");
+        assert_eq!(artifact_family("plain"), "plain");
+    }
+
+    #[test]
+    fn instrumented_executor_records_spans_and_errors() {
+        let rt = InstrumentedExecutor::wrap(Arc::new(NativeBackend::new()));
+        assert_eq!(rt.backend_name(), "native");
+        let name = "wiski_mll_rbf_d2_g16_r128";
+        let spec = rt.spec(name).expect("spec").clone();
+        let inputs: Vec<Tensor> = spec.inputs.iter().map(|io| Tensor::zeros(&io.shape)).collect();
+
+        // successful exec lands in the family span histogram
+        let spans_before = telemetry::histogram("exec.wiski_mll").count();
+        rt.exec(name, &inputs).expect("exec");
+        assert!(telemetry::histogram("exec.wiski_mll").count() > spans_before);
+
+        // failing exec (unknown artifact) bumps the error counter
+        let errs_before = telemetry::counter("exec.errors").get();
+        assert!(rt.exec("wiski_bogus_artifact", &[]).is_err());
+        assert!(telemetry::counter("exec.errors").get() > errs_before);
     }
 }

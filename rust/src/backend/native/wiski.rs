@@ -59,6 +59,7 @@ use crate::gp::ski::Lattice;
 use crate::kernels::{softplus, Kernel};
 use crate::linalg::{axpy, dot, Cholesky, KroneckerToeplitz, KuuOp, Mat};
 use crate::runtime::{ArtifactSpec, Tensor};
+use crate::telemetry;
 
 const LOG_2PI: f64 = 1.8378770664093453;
 /// Jitters mirror model.py (Q_JITTER / C_JITTER).
@@ -209,6 +210,7 @@ impl QSystem {
         caches: &Caches,
         force_dense: bool,
     ) -> Self {
+        let _span = telemetry::span("qsystem.build");
         let r = caches.u.cols;
         let ke = caches.krank.min(r);
         let s2 = kernel.noise_var(theta);
@@ -217,7 +219,11 @@ impl QSystem {
         let u_eff = Mat::from_fn(m, ke, |i, j| caches.u[(i, j)]);
         let c_eff = Mat::from_fn(ke, ke, |i, j| caches.c[(i, j)]);
         let ch = Cholesky::factor_floored(&c_eff, C_JITTER).l;
-        let ku = kuu.matmul(&u_eff); // m x ke, structured matvecs
+        // m x ke, structured matvecs — the ROADMAP's named hot spot
+        let ku = {
+            let _span = telemetry::span("kuu.matvec");
+            kuu.matmul(&u_eff)
+        };
         let t_mat = u_eff.transpose().matmul(&ku); // ke x ke
         let g0 = ch.transpose().matmul(&t_mat.matmul(&ch));
         let qmat = Mat::from_fn(ke, ke, |i, j| {
@@ -247,7 +253,10 @@ impl QSystem {
 
     /// K·S, lazily materialized (predict path only).
     fn ks(&self) -> &Mat {
-        self.ks_cell.get_or_init(|| self.kuu.matmul(&self.s_mat))
+        self.ks_cell.get_or_init(|| {
+            let _span = telemetry::span("kuu.matvec");
+            self.kuu.matmul(&self.s_mat)
+        })
     }
 
     /// MLL as a function of s2 only, reusing every K-dependent piece.
@@ -271,6 +280,7 @@ impl QSystem {
         lattice: &Lattice,
         caches: &Caches,
     ) -> (f64, Vec<f64>) {
+        let _span = telemetry::span("qsystem.grad");
         let m = self.kuu.n();
         let td = kernel.theta_dim();
         let val = self.mll_at_s2(self.s2, caches.yty, caches.n);
@@ -383,13 +393,17 @@ impl QCache {
 
     fn get(&self, key: &str, fp: u64, state: &[Tensor]) -> Option<Arc<QSystem>> {
         let guard = self.inner.lock().unwrap();
-        guard
+        let hit = guard
             .get(key)
             .filter(|e| e.fp == fp && e.state[..] == *state)
-            .map(|e| e.sys.clone())
+            .map(|e| e.sys.clone());
+        drop(guard);
+        telemetry::count(if hit.is_some() { "qcache.hit" } else { "qcache.miss" }, 1);
+        hit
     }
 
     fn put(&self, key: String, fp: u64, state: Vec<Tensor>, sys: Arc<QSystem>) {
+        telemetry::count("qcache.store", 1);
         self.inner.lock().unwrap().insert(key, CacheEntry { fp, state, sys });
     }
 }
@@ -481,6 +495,7 @@ pub(super) fn step(
     let mut caches = Caches::unpack(&inputs[1..7], m, r);
     let (x, y, s, mask) = (&inputs[7], &inputs[8], &inputs[9], &inputs[10]);
     let mut w = vec![0.0f64; m];
+    let interp_span = telemetry::span("step.interp");
     for i in 0..q {
         if mask.data[i] <= 0.0 {
             continue;
@@ -501,6 +516,7 @@ pub(super) fn step(
         caches.yty += yi * yi;
         caches.n += 1.0;
     }
+    drop(interp_span);
     let sys = QSystem::build(&kernel, &theta, &lattice, &caches, force_dense);
     let (val, grad) = sys.mll_and_grad(&kernel, &theta, &lattice, &caches);
     let mut out = caches.pack(m, r);
@@ -563,6 +579,7 @@ pub(super) fn predict(
     let mut mean = vec![0f32; b];
     let mut var = vec![0f32; b];
     let mut a2 = vec![0.0f64; sys.ke];
+    let _span = telemetry::span("predict.interp");
     for i in 0..b {
         let pt: Vec<f64> = (0..d).map(|k| xstar.data[i * d + k] as f64).collect();
         let taps = lattice.interp_taps(&pt);
@@ -781,6 +798,55 @@ mod tests {
         for (a, b) in p1[1].data.iter().zip(&p3[1].data) {
             assert!((a - b).abs() < 1e-4, "warm var {a} vs cold {b}");
         }
+    }
+
+    #[test]
+    fn qcache_counters_record_hit_and_miss() {
+        // Direct evidence for the PR-2 QSystem-cache decision: predict after
+        // step with unchanged theta HITS; a theta change MISSES.  Counters
+        // are process-global and tests run in parallel, so assert monotone
+        // deltas, never exact values.
+        let be = small_backend();
+        let mut caches = zero_cache_inputs(vec![0.4, 0.6, 0.3, -1.2], 64, 64);
+        let mut rng = Rng::new(61);
+        for _ in 0..6 {
+            let mut ins = caches.clone();
+            ins.push(Tensor::new(
+                vec![1, 2],
+                vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+            ));
+            ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            ins.push(Tensor::vec1(vec![1.0]));
+            let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+        }
+        let stores = telemetry::counter("qcache.store").get();
+        assert!(stores >= 6, "every step stores its system (saw {stores})");
+
+        let mut pins = caches.clone();
+        pins.push(Tensor::new(vec![256, 2], vec![0.2f32; 512]));
+        // unchanged theta + the exact caches the last step packed: HIT
+        let hits_before = telemetry::counter("qcache.hit").get();
+        be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins).unwrap();
+        let hits_after = telemetry::counter("qcache.hit").get();
+        assert!(
+            hits_after > hits_before,
+            "predict after step with unchanged theta must hit ({hits_before} -> {hits_after})"
+        );
+
+        // perturbed theta: MISS
+        let mut pins2 = pins.clone();
+        pins2[0].data[0] += 0.05;
+        let misses_before = telemetry::counter("qcache.miss").get();
+        be.exec("wiski_predict_rbf_d2_g8_r64_b256", &pins2).unwrap();
+        let misses_after = telemetry::counter("qcache.miss").get();
+        assert!(
+            misses_after > misses_before,
+            "theta change must miss ({misses_before} -> {misses_after})"
+        );
     }
 
     #[test]

@@ -8,6 +8,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::gp::{OnlineGp, Prediction};
+use crate::metrics::RunningStats;
+use crate::telemetry::{self, HistSnapshot};
 
 /// Client -> server messages.
 pub enum Request {
@@ -31,15 +33,24 @@ pub enum Response {
     Error(String),
 }
 
-/// Counters exposed by the router.
+/// Counters and latency distributions exposed by the router.  Latencies are
+/// full histograms (not flat time sums): tail behavior is the observable
+/// consequence of the paper's O(1) claim, so p95/p99 must be inspectable,
+/// not averaged away.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub observed: u64,
     pub observe_batches: u64,
     pub predicts: u64,
     pub refits: u64,
-    pub observe_time_us: f64,
-    pub predict_time_us: f64,
+    /// Per-`observe_batch` wall time (successful batches only).
+    pub observe_latency: HistSnapshot,
+    /// Per-`predict` wall time.
+    pub predict_latency: HistSnapshot,
+    /// Observations per successful micro-batch (count == observe_batches).
+    pub batch_sizes: RunningStats,
+    /// High-water mark of the coalesced observe queue.
+    pub max_queue_depth: u64,
     /// Observe batches whose `observe_batch` failed.  Observations are
     /// fire-and-forget (no reply channel), so without this counter a
     /// failing model silently drops data; callers assert on it after
@@ -50,12 +61,38 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
+    /// Mean wall time per observe micro-batch (0.0 before any batch).
     pub fn mean_observe_us(&self) -> f64 {
-        if self.observe_batches == 0 {
-            0.0
-        } else {
-            self.observe_time_us / self.observe_batches as f64
-        }
+        self.observe_latency.mean_us()
+    }
+
+    /// Mean wall time per predict call (0.0 before any predict).
+    pub fn mean_predict_us(&self) -> f64 {
+        self.predict_latency.mean_us()
+    }
+
+    pub fn p50_observe_us(&self) -> f64 {
+        self.observe_latency.percentile_us(50.0)
+    }
+
+    pub fn p95_observe_us(&self) -> f64 {
+        self.observe_latency.percentile_us(95.0)
+    }
+
+    pub fn p99_observe_us(&self) -> f64 {
+        self.observe_latency.percentile_us(99.0)
+    }
+
+    pub fn p50_predict_us(&self) -> f64 {
+        self.predict_latency.percentile_us(50.0)
+    }
+
+    pub fn p95_predict_us(&self) -> f64 {
+        self.predict_latency.percentile_us(95.0)
+    }
+
+    pub fn p99_predict_us(&self) -> f64 {
+        self.predict_latency.percentile_us(99.0)
     }
 }
 
@@ -142,19 +179,27 @@ impl ModelServer {
                 if pending_x.is_empty() {
                     return;
                 }
+                let depth = pending_x.len() as u64;
+                telemetry::gauge("server.queue_depth").set(depth);
+                telemetry::gauge("server.batch_size").set(depth);
+                let span = telemetry::span("server.observe_batch");
                 let t0 = Instant::now();
                 let result = model.observe_batch(pending_x, pending_y);
-                let dt = t0.elapsed().as_secs_f64() * 1e6;
+                let dt_us = t0.elapsed().as_micros() as u64;
+                drop(span);
                 let mut st = stats_worker.lock().unwrap();
+                st.max_queue_depth = st.max_queue_depth.max(depth);
                 match result {
                     Ok(()) => {
                         st.observed += pending_x.len() as u64;
                         st.observe_batches += 1;
-                        st.observe_time_us += dt;
+                        st.observe_latency.record_us(dt_us);
+                        st.batch_sizes.push(pending_x.len() as f64);
                     }
                     Err(e) => {
                         st.observe_errors += 1;
                         st.last_error = Some(format!("{e:#}"));
+                        telemetry::count("server.observe_errors", 1);
                         eprintln!("observe error: {e:#}");
                     }
                 }
@@ -210,14 +255,17 @@ impl ModelServer {
     ) -> bool {
         match req {
             Request::Predict { xs, reply } => {
+                let span = telemetry::span("server.predict");
                 let t0 = Instant::now();
                 let resp = match model.predict(&xs) {
                     Ok(p) => Response::Predictions(p),
                     Err(e) => Response::Error(format!("{e:#}")),
                 };
+                let dt_us = t0.elapsed().as_micros() as u64;
+                drop(span);
                 let mut st = stats.lock().unwrap();
                 st.predicts += 1;
-                st.predict_time_us += t0.elapsed().as_secs_f64() * 1e6;
+                st.predict_latency.record_us(dt_us);
                 let _ = reply.send(resp);
                 true
             }
@@ -282,10 +330,38 @@ mod tests {
         // a healthy model must not have dropped any observation
         assert_eq!(stats.observe_errors, 0, "last error: {:?}", stats.last_error);
         assert!(stats.last_error.is_none());
+        // latency histogram populated: one sample per successful batch
+        assert_eq!(stats.observe_latency.count(), stats.observe_batches);
+        assert_eq!(stats.batch_sizes.count(), stats.observe_batches);
+        assert!((stats.batch_sizes.mean() * stats.observe_batches as f64 - 20.0).abs() < 1e-9);
+        assert!(stats.max_queue_depth >= 1);
+        let (p50, p95, p99) =
+            (stats.p50_observe_us(), stats.p95_observe_us(), stats.p99_observe_us());
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(p99 <= stats.observe_latency.max_us() as f64);
         let preds = h.predict(vec![vec![0.0], vec![0.5]]).unwrap();
         assert_eq!(preds.len(), 2);
         assert!(preds[0].mean.is_finite());
+        // predict latency lands in its own histogram
+        let stats = h.stats();
+        assert_eq!(stats.predicts, 1);
+        assert_eq!(stats.predict_latency.count(), 1);
+        assert!(stats.p95_predict_us() >= stats.p50_predict_us());
         server.shutdown();
+    }
+
+    #[test]
+    fn stats_percentiles_are_zero_count_safe() {
+        let stats = ServerStats::default();
+        assert_eq!(stats.mean_observe_us(), 0.0);
+        assert_eq!(stats.mean_predict_us(), 0.0);
+        assert_eq!(stats.p50_observe_us(), 0.0);
+        assert_eq!(stats.p95_observe_us(), 0.0);
+        assert_eq!(stats.p99_observe_us(), 0.0);
+        assert_eq!(stats.p50_predict_us(), 0.0);
+        assert_eq!(stats.p95_predict_us(), 0.0);
+        assert_eq!(stats.p99_predict_us(), 0.0);
+        assert_eq!(stats.max_queue_depth, 0);
     }
 
     /// A model whose `observe_batch` always fails: the router must keep

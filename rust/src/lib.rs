@@ -23,6 +23,9 @@
 //!   Dirichlet classification wrapper.
 //! - [`coordinator`]: threaded streaming server with observation
 //!   micro-batching and error accounting.
+//! - [`telemetry`]: zero-dependency spans, counters, and log₂ latency
+//!   histograms behind a global registry; `WISKI_TRACE={off,pretty,json}`
+//!   controls per-event emission.
 //! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
 //!   (the paper's §5.3 / §5.4 applications).
 //! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
@@ -58,3 +61,4 @@ pub mod metrics;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod telemetry;

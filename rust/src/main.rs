@@ -1,6 +1,8 @@
 //! `wiski` CLI — leader entrypoint for the online-GP service.
 //!
-//! Subcommands (no clap offline; tiny hand-rolled parser):
+//! Subcommands (no clap offline; tiny hand-rolled parser — but a *strict*
+//! one: unknown subcommands and flags are errors, never silently ignored.
+//! An unobservable typo is an observability bug):
 //!   info                      list artifacts and their calling conventions
 //!   serve [--stream N]        run the streaming coordinator demo
 //!   check                     prepare every artifact and execute a probe
@@ -9,6 +11,9 @@
 //!   --backend native|pjrt     execution engine (default: native, or the
 //!                             WISKI_BACKEND environment variable)
 //!   --artifacts DIR           artifact directory for the pjrt backend
+//!
+//! `WISKI_TRACE={off,pretty,json}` controls telemetry emission; any mode
+//! other than `off` also prints the full registry report on exit.
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -19,31 +24,97 @@ use wiski::gp::{Wiski, WiskiConfig};
 use wiski::kernels::inv_softplus;
 use wiski::rng::Rng;
 use wiski::runtime::Tensor;
+use wiski::telemetry::{self, TraceMode};
+
+const USAGE: &str = "usage: wiski [info|serve|check] [flags]
+  info                     list artifacts and their calling conventions
+  serve [--stream N]       run the streaming coordinator demo (default N=1000)
+  check                    prepare every artifact and execute a probe
+flags:
+  --backend native|pjrt    execution engine (default: native or WISKI_BACKEND)
+  --artifacts DIR          artifact directory for the pjrt backend
+  -h, --help               print this help
+environment:
+  WISKI_TRACE=off|pretty|json   telemetry emission (default off)
+  WISKI_KUU=dense               force the dense K_UU oracle (native backend)";
+
+/// Parsed command line: strict — every token must be consumed.
+struct Cli {
+    cmd: String,
+    backend: Option<String>,
+    artifacts: String,
+    stream: Option<usize>,
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("wiski: {msg}\n{USAGE}");
+    std::process::exit(2);
+}
+
+fn parse_cli(args: &[String]) -> Cli {
+    let mut cli =
+        Cli { cmd: String::new(), backend: None, artifacts: "artifacts".into(), stream: None };
+    let mut it = args.iter().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                std::process::exit(0);
+            }
+            "--backend" => match it.next() {
+                Some(v) => cli.backend = Some(v.clone()),
+                None => die("--backend requires a value (native|pjrt)"),
+            },
+            "--artifacts" => match it.next() {
+                Some(v) => cli.artifacts = v.clone(),
+                None => die("--artifacts requires a directory"),
+            },
+            "--stream" => match it.next().and_then(|v| v.parse().ok()) {
+                Some(n) => cli.stream = Some(n),
+                None => die("--stream requires a positive integer"),
+            },
+            flag if flag.starts_with('-') => die(&format!("unknown flag {flag:?}")),
+            cmd if cli.cmd.is_empty() => match cmd {
+                "info" | "serve" | "check" => cli.cmd = cmd.to_string(),
+                other => die(&format!("unknown command {other:?}; try: info | serve | check")),
+            },
+            extra => die(&format!("unexpected argument {extra:?}")),
+        }
+    }
+    if cli.cmd.is_empty() {
+        cli.cmd = "info".into();
+    }
+    if cli.stream.is_some() && cli.cmd != "serve" {
+        die("--stream only applies to the serve command");
+    }
+    cli
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let cmd = args.get(1).map(String::as_str).unwrap_or("info");
-    let dir = args
-        .iter()
-        .position(|a| a == "--artifacts")
-        .and_then(|i| args.get(i + 1).cloned())
-        .unwrap_or_else(|| "artifacts".into());
-    let rt = match args
-        .iter()
-        .position(|a| a == "--backend")
-        .and_then(|i| args.get(i + 1).cloned())
-    {
-        Some(name) => backend_by_name(&name, &dir)?,
-        None => default_backend(&dir)?,
+    let cli = parse_cli(&args);
+    let rt = match &cli.backend {
+        Some(name) => backend_by_name(name, &cli.artifacts)?,
+        None => default_backend(&cli.artifacts)?,
     };
-    match cmd {
+    let result = match cli.cmd.as_str() {
         "info" => info(&rt),
-        "serve" => serve(rt, &args),
+        "serve" => serve(rt, cli.stream.unwrap_or(1000)),
         "check" => check(&rt),
-        other => {
-            eprintln!("unknown command {other}; try: info | serve | check");
-            std::process::exit(2);
-        }
+        _ => unreachable!("parse_cli validates the command"),
+    };
+    emit_telemetry_report();
+    result
+}
+
+/// Exit-time registry dump: JSON snapshot line or pretty table on stderr,
+/// gated by the same WISKI_TRACE switch as per-event emission.
+fn emit_telemetry_report() {
+    let snap = telemetry::snapshot();
+    match telemetry::trace_mode() {
+        TraceMode::Off => {}
+        TraceMode::Json => eprintln!("{}", snap.to_json()),
+        TraceMode::Pretty => eprintln!("{}", snap.pretty()),
     }
 }
 
@@ -58,13 +129,7 @@ fn info(rt: &Arc<dyn Executor>) -> Result<()> {
     Ok(())
 }
 
-fn serve(rt: Arc<dyn Executor>, args: &[String]) -> Result<()> {
-    let n: usize = args
-        .iter()
-        .position(|a| a == "--stream")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1000);
+fn serve(rt: Arc<dyn Executor>, n: usize) -> Result<()> {
     let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
     let server = ModelServer::spawn(model, 8);
     let h = server.handle();
@@ -84,11 +149,28 @@ fn serve(rt: Arc<dyn Executor>, args: &[String]) -> Result<()> {
         stats.observed as f64 / stats.observe_batches.max(1) as f64,
         stats.observe_errors
     );
+    println!(
+        "observe batch latency: p50 {:.0}us p95 {:.0}us p99 {:.0}us (max queue depth {})",
+        stats.p50_observe_us(),
+        stats.p95_observe_us(),
+        stats.p99_observe_us(),
+        stats.max_queue_depth
+    );
     if let Some(e) = &stats.last_error {
         eprintln!("last observe error: {e}");
     }
+    // predict twice: the first builds the Q-system for the post-stream
+    // theta, the second exercises the QCache hit path end to end
+    let _ = h.predict(vec![vec![0.0, 0.0]])?;
     let p = h.predict(vec![vec![0.0, 0.0]])?;
     println!("posterior at origin: {:+.3} +- {:.3}", p[0].mean, p[0].var_y.sqrt());
+    let stats = h.stats();
+    println!(
+        "predict latency: p50 {:.0}us p95 {:.0}us over {} calls",
+        stats.p50_predict_us(),
+        stats.p95_predict_us(),
+        stats.predicts
+    );
     server.shutdown();
     Ok(())
 }

@@ -37,12 +37,21 @@ pub fn accuracy(pred: &[usize], target: &[usize]) -> f64 {
     hits as f64 / pred.len().max(1) as f64
 }
 
-/// Streaming mean/stddev (Welford).
-#[derive(Clone, Debug, Default)]
+/// Streaming mean/stddev (Welford) with range tracking and pairwise
+/// combination (Chan's parallel update), so per-thread stats can be merged.
+#[derive(Clone, Debug)]
 pub struct RunningStats {
     n: u64,
     mean: f64,
     m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for RunningStats {
+    fn default() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
 }
 
 impl RunningStats {
@@ -51,6 +60,8 @@ impl RunningStats {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
     }
 
     pub fn count(&self) -> u64 {
@@ -67,6 +78,44 @@ impl RunningStats {
         } else {
             (self.m2 / (self.n - 1) as f64).sqrt()
         }
+    }
+
+    /// Smallest value seen (0.0 before any push).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest value seen (0.0 before any push).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Fold `other` in as if its samples had been pushed here (Chan et al.'s
+    /// parallel Welford combination — exact, not an approximation).
+    pub fn merge(&mut self, other: &Self) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (n1, n2) = (self.n as f64, other.n as f64);
+        let n = n1 + n2;
+        let d = other.mean - self.mean;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -147,6 +196,48 @@ mod tests {
         }
         assert!((st.mean() - 2.5).abs() < 1e-12);
         assert!((st.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.max(), 4.0);
+    }
+
+    #[test]
+    fn running_stats_empty_min_max_are_zero() {
+        let st = RunningStats::default();
+        assert_eq!(st.min(), 0.0);
+        assert_eq!(st.max(), 0.0);
+        assert_eq!(st.count(), 0);
+    }
+
+    #[test]
+    fn running_stats_merge_equals_sequential_push() {
+        let xs = [3.0, -1.0, 4.0, 1.5, -9.2, 2.6, 5.3, 0.5];
+        let mut whole = RunningStats::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = RunningStats::default();
+        let mut b = RunningStats::default();
+        for &x in &xs[..3] {
+            a.push(x);
+        }
+        for &x in &xs[3..] {
+            b.push(x);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-12);
+        assert!((merged.std() - whole.std()).abs() < 1e-12);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        // merging into an empty accumulator adopts the other side wholesale
+        let mut empty = RunningStats::default();
+        empty.merge(&whole);
+        assert!((empty.mean() - whole.mean()).abs() < 1e-12);
+        // and merging an empty side is a no-op
+        let before = whole.mean();
+        whole.merge(&RunningStats::default());
+        assert_eq!(whole.mean(), before);
     }
 
     #[test]

@@ -1,0 +1,710 @@
+//! Zero-dependency telemetry: RAII span timers, atomic counters and gauges,
+//! and fixed-bucket log₂-scale latency histograms behind one global registry.
+//!
+//! The paper's headline claim is *constant-time* online updates; this module
+//! is how the repo observes whether the native backend actually delivers
+//! flat per-step latency as n grows.  Every layer reports here:
+//!
+//! - the [`crate::backend::InstrumentedExecutor`] decorator times every
+//!   artifact call (`exec.wiski_step`, `exec.osvgp_predict`, ...),
+//! - the native WISKI kernels mark their phases (`qsystem.build`,
+//!   `qsystem.grad`, `kuu.matvec`, `step.interp`, `predict.interp`) and
+//!   count Q-system cache traffic (`qcache.hit` / `qcache.miss` /
+//!   `qcache.store`),
+//! - the coordinator records batch latency and queue pressure
+//!   (`server.observe_batch`, `server.predict`, `server.queue_depth`,
+//!   `server.batch_size`).
+//!
+//! **Recording vs emission.**  Metrics are *always* recorded in-process
+//! (lock-free atomics; a span costs two `Instant::now` reads and one bucket
+//! increment — noise next to the µs-to-ms operations being timed), so tests
+//! and the bench harness can assert on [`snapshot`] without environment
+//! setup.  *Emission* of per-event lines is opt-in via the `WISKI_TRACE`
+//! environment variable:
+//!
+//! - `off` (default): record only, print nothing;
+//! - `pretty`: human-readable `[trace] ...` lines on stderr;
+//! - `json`: one JSON object per line on stderr (`{"type":"span",...}`,
+//!   `{"type":"counter",...}`, and the final `{"type":"snapshot",...}`
+//!   report) — machine-parseable, validated by the ci.sh smoke gate.
+//!
+//! Histograms use 40 log₂ buckets over microseconds (bucket i covers
+//! `[2^(i-1), 2^i)`; bucket 0 holds sub-µs samples), with exact count, sum,
+//! min, and max carried alongside so `mean` is exact and the p50/p95/p99
+//! readouts are bucket midpoints clamped to the observed range.  The same
+//! bucket layout backs the plain [`HistSnapshot`] value type that
+//! [`crate::coordinator::ServerStats`] embeds and the bench harness writes
+//! into `BENCH_wiski_kuu.json`.
+//!
+//! Offline builds forbid external crates, so everything here is std-only.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Number of log₂ latency buckets: covers 0 .. 2^39 us (~6 days).
+pub const HIST_BUCKETS: usize = 40;
+
+// ---------------------------------------------------------------------------
+// Trace mode (WISKI_TRACE)
+// ---------------------------------------------------------------------------
+
+/// Event-emission mode, parsed once from `WISKI_TRACE`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Record to the registry only; print nothing (the default).
+    Off,
+    /// Human-readable `[trace] ...` lines on stderr.
+    Pretty,
+    /// One JSON object per line on stderr.
+    Json,
+}
+
+impl TraceMode {
+    /// Parse a `WISKI_TRACE` value; `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "" | "off" => Some(TraceMode::Off),
+            "pretty" => Some(TraceMode::Pretty),
+            "json" => Some(TraceMode::Json),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Pretty => "pretty",
+            TraceMode::Json => "json",
+        }
+    }
+}
+
+/// The process-wide emission mode (reads `WISKI_TRACE` once).
+pub fn trace_mode() -> TraceMode {
+    static MODE: OnceLock<TraceMode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("WISKI_TRACE") {
+        Err(_) => TraceMode::Off,
+        Ok(v) => TraceMode::parse(&v).unwrap_or_else(|| {
+            eprintln!("wiski: unknown WISKI_TRACE value {v:?} (use off|pretty|json); tracing off");
+            TraceMode::Off
+        }),
+    })
+}
+
+/// Microseconds since the first telemetry call (event timestamps).
+fn ts_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// One locked write per line so concurrent emitters never interleave.
+fn emit(line: &str) {
+    use std::io::Write;
+    let stderr = std::io::stderr();
+    let mut lock = stderr.lock();
+    let _ = writeln!(lock, "{line}");
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Add `delta`; returns the new total.
+    pub fn add(&self, delta: u64) -> u64 {
+        self.v.fetch_add(delta, Ordering::Relaxed) + delta
+    }
+
+    pub fn inc(&self) -> u64 {
+        self.add(1)
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge that also tracks its high-water mark.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    last: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.last.store(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.last.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+}
+
+/// Thread-safe latency histogram (log₂ buckets over microseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    /// `u64::MAX` until the first sample.
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a microsecond value: 0 for sub-µs, else
+/// `floor(log2(us)) + 1`, clamped to the top bucket.
+fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        ((64 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough copy for reporting (individual loads are relaxed;
+    /// concurrent recording can skew a snapshot by the in-flight samples).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for (i, b) in self.buckets.iter().enumerate() {
+            s.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        s.count = self.count.load(Ordering::Relaxed);
+        s.sum_us = self.sum_us.load(Ordering::Relaxed);
+        s.min_us = self.min_us.load(Ordering::Relaxed);
+        s.max_us = self.max_us.load(Ordering::Relaxed);
+        s
+    }
+}
+
+/// Plain (non-atomic, `Clone`) histogram value: the same bucket layout as
+/// [`Histogram`], used for snapshots, for per-thread accumulation, and as
+/// the latency fields of [`crate::coordinator::ServerStats`].
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+}
+
+impl HistSnapshot {
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean in microseconds (0.0 with no samples).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (0 with no samples).
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Bucket-midpoint percentile estimate in microseconds, clamped to the
+    /// observed [min, max] range.  Zero-count-safe: returns 0.0 when empty.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+                let hi = 1u64 << i;
+                let mid = (lo + hi) as f64 / 2.0;
+                return mid.clamp(self.min_us as f64, self.max_us as f64);
+            }
+        }
+        self.max_us as f64
+    }
+
+    /// Fold another histogram in (combining per-thread or per-window stats).
+    pub fn merge(&mut self, other: &Self) {
+        if other.count == 0 {
+            return;
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Compact JSON object (`{"count":..,"mean_us":..,...}`), newline-free.
+    pub fn json_obj(&self) -> String {
+        format!(
+            "{{\"count\":{},\"mean_us\":{:.1},\"p50_us\":{:.1},\"p95_us\":{:.1},\
+             \"p99_us\":{:.1},\"min_us\":{},\"max_us\":{}}}",
+            self.count,
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.min_us(),
+            self.max_us()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        hists: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// The counter registered under `name` (created on first use).  Hot loops
+/// should fetch the handle once and reuse it.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut map = registry().counters.lock().unwrap();
+    match map.get(name) {
+        Some(c) => c.clone(),
+        None => {
+            let c = Arc::new(Counter::default());
+            map.insert(name.to_string(), c.clone());
+            c
+        }
+    }
+}
+
+/// The gauge registered under `name` (created on first use).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut map = registry().gauges.lock().unwrap();
+    match map.get(name) {
+        Some(g) => g.clone(),
+        None => {
+            let g = Arc::new(Gauge::default());
+            map.insert(name.to_string(), g.clone());
+            g
+        }
+    }
+}
+
+/// The histogram registered under `name` (created on first use).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut map = registry().hists.lock().unwrap();
+    match map.get(name) {
+        Some(h) => h.clone(),
+        None => {
+            let h = Arc::new(Histogram::default());
+            map.insert(name.to_string(), h.clone());
+            h
+        }
+    }
+}
+
+/// Increment the named counter and, when tracing is on, emit a counter
+/// event line.  For silent high-frequency counting use [`counter`] directly.
+pub fn count(name: &str, delta: u64) {
+    let total = counter(name).add(delta);
+    match trace_mode() {
+        TraceMode::Off => {}
+        TraceMode::Pretty => emit(&format!("[trace] count {name} +{delta} = {total}")),
+        TraceMode::Json => emit(&format!(
+            "{{\"type\":\"counter\",\"name\":\"{}\",\"delta\":{delta},\"total\":{total},\
+             \"ts_us\":{}}}",
+            json_escape(name),
+            ts_us()
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// RAII span timer: created by [`span`], records its elapsed time into the
+/// histogram of the same name on drop (and emits an event when tracing).
+pub struct Span {
+    name: String,
+    hist: Arc<Histogram>,
+    start: Instant,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let us = self.start.elapsed().as_micros() as u64;
+        self.hist.record_us(us);
+        match trace_mode() {
+            TraceMode::Off => {}
+            TraceMode::Pretty => emit(&format!("[trace] span {} {us}us", self.name)),
+            TraceMode::Json => emit(&format!(
+                "{{\"type\":\"span\",\"name\":\"{}\",\"us\":{us},\"ts_us\":{}}}",
+                json_escape(&self.name),
+                ts_us()
+            )),
+        }
+    }
+}
+
+/// Start a span; the timing lands in `histogram(name)` when the returned
+/// guard drops.  Bind it (`let _span = span("...");`) for scope timing.
+#[must_use = "a span records on drop; binding it to _ drops immediately"]
+pub fn span(name: &str) -> Span {
+    Span { name: name.to_string(), hist: histogram(name), start: Instant::now() }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot / report
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of the whole registry.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// (name, total) pairs, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// (name, last, max) triples, name-sorted.
+    pub gauges: Vec<(String, u64, u64)>,
+    /// (name, histogram) pairs, name-sorted.
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// Snapshot every registered metric.
+pub fn snapshot() -> Snapshot {
+    let reg = registry();
+    let counters = reg
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.get()))
+        .collect();
+    let gauges = reg
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.get(), v.max()))
+        .collect();
+    let hists = reg
+        .hists
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.snapshot()))
+        .collect();
+    Snapshot { counters, gauges, hists }
+}
+
+impl Snapshot {
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+    }
+
+    /// One newline-free JSON object covering the whole registry.
+    pub fn to_json(&self) -> String {
+        let counters: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(n, v)| format!("\"{}\":{v}", json_escape(n)))
+            .collect();
+        let gauges: Vec<String> = self
+            .gauges
+            .iter()
+            .map(|(n, last, max)| {
+                format!("\"{}\":{{\"last\":{last},\"max\":{max}}}", json_escape(n))
+            })
+            .collect();
+        let hists: Vec<String> = self
+            .hists
+            .iter()
+            .map(|(n, h)| format!("\"{}\":{}", json_escape(n), h.json_obj()))
+            .collect();
+        format!(
+            "{{\"type\":\"snapshot\",\"ts_us\":{},\"counters\":{{{}}},\"gauges\":{{{}}},\
+             \"histograms\":{{{}}}}}",
+            ts_us(),
+            counters.join(","),
+            gauges.join(","),
+            hists.join(",")
+        )
+    }
+
+    /// Human-readable multi-line report (the `WISKI_TRACE=pretty` exit dump).
+    pub fn pretty(&self) -> String {
+        let mut out = String::from("telemetry report");
+        if !self.counters.is_empty() {
+            out.push_str("\n  counters:");
+            for (n, v) in &self.counters {
+                out.push_str(&format!("\n    {n:<32} {v:>10}"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("\n  gauges (last/max):");
+            for (n, last, max) in &self.gauges {
+                out.push_str(&format!("\n    {n:<32} {last:>6}/{max}"));
+            }
+        }
+        if !self.hists.is_empty() {
+            out.push_str(&format!(
+                "\n  latency histograms (us):\n    {:<28} {:>8} {:>10} {:>10} {:>10} {:>10}",
+                "span", "count", "mean", "p50", "p95", "p99"
+            ));
+            for (n, h) in &self.hists {
+                out.push_str(&format!(
+                    "\n    {:<28} {:>8} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+                    n,
+                    h.count(),
+                    h.mean_us(),
+                    h.percentile_us(50.0),
+                    h.percentile_us(95.0),
+                    h.percentile_us(99.0)
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_mode_parses_known_values_only() {
+        assert_eq!(TraceMode::parse("off"), Some(TraceMode::Off));
+        assert_eq!(TraceMode::parse(""), Some(TraceMode::Off));
+        assert_eq!(TraceMode::parse("pretty"), Some(TraceMode::Pretty));
+        assert_eq!(TraceMode::parse("json"), Some(TraceMode::Json));
+        assert_eq!(TraceMode::parse("verbose"), None);
+        assert_eq!(TraceMode::Json.as_str(), "json");
+    }
+
+    #[test]
+    fn bucket_layout_is_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn hist_percentiles_ordered_and_in_range() {
+        let mut h = HistSnapshot::default();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+        assert_eq!(h.min_us(), 1);
+        assert_eq!(h.max_us(), 1000);
+        let (p50, p95, p99) = (h.percentile_us(50.0), h.percentile_us(95.0), h.percentile_us(99.0));
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        assert!(p50 >= 1.0 && p99 <= 1000.0);
+        // p50 of uniform 1..1000 lands in the [256,512) bucket
+        assert!((256.0..512.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn empty_hist_is_zero_count_safe() {
+        let h = HistSnapshot::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(50.0), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.min_us(), 0);
+        assert_eq!(h.max_us(), 0);
+        // and its JSON is still a sane object
+        let j = h.json_obj();
+        assert!(j.starts_with('{') && j.ends_with('}') && !j.contains('\n'), "{j}");
+    }
+
+    #[test]
+    fn hist_merge_combines_counts_and_range() {
+        let mut a = HistSnapshot::default();
+        let mut b = HistSnapshot::default();
+        a.record_us(10);
+        a.record_us(20);
+        b.record_us(5000);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        merged.merge(&HistSnapshot::default()); // empty merge is a no-op
+        assert_eq!(merged.count(), 3);
+        assert_eq!(merged.min_us(), 10);
+        assert_eq!(merged.max_us(), 5000);
+        assert!((merged.mean_us() - 5030.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_histogram_snapshot_round_trips() {
+        let h = Histogram::default();
+        h.record_us(7);
+        h.record(Duration::from_micros(300));
+        let s = h.snapshot();
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.min_us(), 7);
+        assert_eq!(s.max_us(), 300);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn counters_and_gauges_register_globally() {
+        let c = counter("test.telemetry.counter");
+        let before = c.get();
+        c.inc();
+        count("test.telemetry.counter", 2);
+        assert_eq!(counter("test.telemetry.counter").get(), before + 3);
+
+        let g = gauge("test.telemetry.gauge");
+        g.set(5);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.max(), 5);
+    }
+
+    #[test]
+    fn span_records_into_named_histogram() {
+        let before = histogram("test.telemetry.span").count();
+        {
+            let _s = span("test.telemetry.span");
+            std::hint::black_box(());
+        }
+        assert_eq!(histogram("test.telemetry.span").count(), before + 1);
+    }
+
+    #[test]
+    fn snapshot_exposes_metrics_and_single_line_json() {
+        counter("test.snapshot.counter").add(4);
+        gauge("test.snapshot.gauge").set(9);
+        histogram("test.snapshot.hist").record_us(123);
+        let snap = snapshot();
+        assert!(snap.counter_value("test.snapshot.counter") >= 4);
+        assert!(snap.hist("test.snapshot.hist").is_some());
+        assert!(snap.hist("test.snapshot.does.not.exist").is_none());
+        let json = snap.to_json();
+        assert!(!json.contains('\n'), "snapshot JSON must be one line");
+        assert!(json.contains("\"test.snapshot.counter\":"));
+        assert!(json.contains("\"test.snapshot.hist\":{\"count\":"));
+        let pretty = snap.pretty();
+        assert!(pretty.contains("test.snapshot.gauge"));
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain.name"), "plain.name");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

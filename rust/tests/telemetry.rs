@@ -1,0 +1,261 @@
+//! Integration tests for the telemetry layer: stream a model through the
+//! instrumented stack and assert the registry observed every phase.
+//!
+//! The registry is process-global and the test harness runs files in
+//! parallel threads, so every assertion is a *monotone delta* (counter went
+//! up, histogram gained samples) — never an exact value.
+
+use std::sync::Arc;
+
+use wiski::backend::{Executor, InstrumentedExecutor, NativeBackend};
+use wiski::coordinator::ModelServer;
+use wiski::data::Projection;
+use wiski::gp::{OnlineGp, Wiski, WiskiConfig};
+use wiski::rng::Rng;
+use wiski::telemetry;
+
+fn instrumented() -> Arc<dyn Executor> {
+    InstrumentedExecutor::wrap(Arc::new(NativeBackend::new()))
+}
+
+fn toy_stream(n: usize, seed: u64) -> Vec<(Vec<f64>, f64)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+            let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+            (x, y)
+        })
+        .collect()
+}
+
+#[test]
+fn full_stack_records_every_phase() {
+    let step_spans = telemetry::histogram("exec.wiski_step").count();
+    let predict_spans = telemetry::histogram("exec.wiski_predict").count();
+    let build_spans = telemetry::histogram("qsystem.build").count();
+    let matvec_spans = telemetry::histogram("kuu.matvec").count();
+    let grad_spans = telemetry::histogram("qsystem.grad").count();
+    let step_interp = telemetry::histogram("step.interp").count();
+    let predict_interp = telemetry::histogram("predict.interp").count();
+    let stores = telemetry::counter("qcache.store").get();
+
+    let rt = instrumented();
+    let mut model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2)).unwrap();
+    for (x, y) in toy_stream(12, 1) {
+        model.observe(&x, y).unwrap();
+    }
+    model.predict(&[vec![0.0, 0.0]]).unwrap();
+
+    assert!(telemetry::histogram("exec.wiski_step").count() >= step_spans + 12);
+    assert!(telemetry::histogram("exec.wiski_predict").count() > predict_spans);
+    assert!(telemetry::histogram("qsystem.build").count() >= build_spans + 12);
+    assert!(telemetry::histogram("kuu.matvec").count() >= matvec_spans + 12);
+    assert!(telemetry::histogram("qsystem.grad").count() >= grad_spans + 12);
+    assert!(telemetry::histogram("step.interp").count() >= step_interp + 12);
+    assert!(telemetry::histogram("predict.interp").count() > predict_interp);
+    assert!(telemetry::counter("qcache.store").get() >= stores + 12);
+}
+
+#[test]
+fn repeated_predict_hits_qcache_through_the_model() {
+    // Same query twice with frozen theta: the second predict must reuse the
+    // memoized Q-system (this is the serve-path hit the CLI demonstrates).
+    let rt = instrumented();
+    let cfg = WiskiConfig { lr: 0.0, grad_steps: 0, ..WiskiConfig::default() };
+    let mut model = Wiski::new(rt, cfg, Projection::identity(2)).unwrap();
+    for (x, y) in toy_stream(10, 2) {
+        model.observe(&x, y).unwrap();
+    }
+    let q = vec![vec![0.1, -0.3]];
+    let p1 = model.predict(&q).unwrap();
+    let hits_before = telemetry::counter("qcache.hit").get();
+    let p2 = model.predict(&q).unwrap();
+    assert!(
+        telemetry::counter("qcache.hit").get() > hits_before,
+        "identical repeat predict must hit the Q-system cache"
+    );
+    assert_eq!(p1[0].mean, p2[0].mean, "cache hit must not change the answer");
+}
+
+#[test]
+fn coordinator_populates_server_telemetry() {
+    let batch_spans = telemetry::histogram("server.observe_batch").count();
+    let predict_spans = telemetry::histogram("server.predict").count();
+
+    let rt = instrumented();
+    let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2)).unwrap();
+    let server = ModelServer::spawn(model, 4);
+    let h = server.handle();
+    for (x, y) in toy_stream(40, 3) {
+        h.observe(x, y).unwrap();
+    }
+    let stats = h.flush().unwrap();
+    h.predict(vec![vec![0.0, 0.0]]).unwrap();
+    server.shutdown();
+
+    assert_eq!(stats.observed, 40);
+    assert_eq!(stats.observe_latency.count(), stats.observe_batches);
+    assert!(stats.p99_observe_us() >= stats.p50_observe_us());
+    assert!(stats.max_queue_depth >= 1 && stats.max_queue_depth <= 4);
+    assert!(
+        telemetry::histogram("server.observe_batch").count()
+            >= batch_spans + stats.observe_batches
+    );
+    assert!(telemetry::histogram("server.predict").count() > predict_spans);
+    // the batch-size gauge saw at least one batch this run
+    assert!(telemetry::gauge("server.batch_size").max() >= 1);
+}
+
+#[test]
+fn snapshot_json_is_machine_parseable() {
+    // Populate a few metrics, then validate the full snapshot line with a
+    // real (if tiny) JSON parser — the ci.sh gate does the same via python.
+    telemetry::count("test.itest.counter", 3);
+    telemetry::gauge("test.itest.gauge").set(7);
+    telemetry::histogram("test.itest.hist").record_us(42);
+    let snap = telemetry::snapshot();
+    assert!(snap.counter_value("test.itest.counter") >= 3);
+    let json = snap.to_json();
+    assert!(!json.contains('\n'));
+    let mut p = Json { s: json.as_bytes(), i: 0 };
+    p.value().unwrap_or_else(|e| panic!("snapshot JSON invalid at byte {}: {e}\n{json}", p.i));
+    p.ws();
+    assert_eq!(p.i, p.s.len(), "trailing garbage after JSON value");
+}
+
+/// Minimal recursive-descent JSON validator (tests only; no external crates
+/// offline).  Accepts exactly the grammar json.org defines — good enough to
+/// prove the exporter emits well-formed documents.
+struct Json<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Json<'_> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && matches!(self.s[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.s.len() && self.s[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?}", c as char))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        match self.peek().ok_or("unexpected end")? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(format!("unexpected byte {:?}", c as char)),
+        }
+    }
+
+    fn object(&mut self) -> Result<(), String> {
+        self.eat(b'{')?;
+        if self.peek() == Some(b'}') {
+            return self.eat(b'}');
+        }
+        loop {
+            self.string()?;
+            self.eat(b':')?;
+            self.value()?;
+            match self.peek() {
+                Some(b',') => self.eat(b',')?,
+                Some(b'}') => return self.eat(b'}'),
+                _ => return Err("expected , or } in object".into()),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.eat(b'[')?;
+        if self.peek() == Some(b']') {
+            return self.eat(b']');
+        }
+        loop {
+            self.value()?;
+            match self.peek() {
+                Some(b',') => self.eat(b',')?,
+                Some(b']') => return self.eat(b']'),
+                _ => return Err("expected , or ] in array".into()),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        self.eat(b'"')?;
+        while let Some(&c) = self.s.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    let esc = *self.s.get(self.i).ok_or("dangling escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                        b'u' => {
+                            for _ in 0..4 {
+                                let h = *self.s.get(self.i).ok_or("short \\u escape")?;
+                                if !h.is_ascii_hexdigit() {
+                                    return Err("bad \\u escape".into());
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => return Err("bad escape".into()),
+                    }
+                }
+                c if c < 0x20 => return Err("raw control char in string".into()),
+                _ => {}
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), String> {
+        self.ws();
+        if self.s[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal, wanted {}", String::from_utf8_lossy(lit)))
+        }
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        self.ws();
+        let start = self.i;
+        if self.s.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        if self.i == start {
+            Err("empty number".into())
+        } else {
+            Ok(())
+        }
+    }
+}
