@@ -38,6 +38,7 @@ const SECTIONS: &[(&str, &str, BenchFn)] = &[
     ("ablation_beta", "Fig A.3: O-SVGP GVI beta ablation", ablation_beta),
     ("ablation_steps", "Fig A.2: O-SVGP grad-steps ablation", ablation_steps),
     ("perf", "microbenchmarks: per-op latencies across (m, r)", perf),
+    ("gemm", "blocked vs naive GEMM at the QSystem hot shapes, threads 1/2/4", gemm),
     ("wiski_kuu", "dense vs structured K_UU: QSystem build + predict, g in {16,32,64}, d=2", wiski_kuu),
 ];
 
@@ -494,6 +495,60 @@ fn ablation_steps(rt: &Arc<dyn Executor>) {
     println!("(paper Fig A.2: with batch=1 streams, extra steps help little)");
 }
 
+// -------------------------------------------------------------------- gemm --
+
+/// Blocked/parallel GEMM vs the retained naive reference at the shapes the
+/// QSystem hot path actually runs (g=64, krank=256: `U^T(KU)` is
+/// (k×m)·(m×k), `S = U·Ch` is (m×k)·(k×k)) plus a square stress shape.
+/// Sweeps the worker pool over 1/2/4 threads via `par::set_threads` and
+/// asserts the blocked result is bitwise equal to the reference every time.
+fn gemm(_rt: &Arc<dyn Executor>) {
+    use wiski::linalg::Mat;
+
+    fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    }
+
+    let shapes = [
+        (256usize, 4096usize, 256usize), // U^T (K U): k x m times m x k
+        (4096, 256, 256),                // S = U Ch:  m x k times k x k
+        (512, 512, 512),                 // square stress
+    ];
+    println!("  (m, k, n)             kernel   threads     ms    GFLOP/s   vs naive");
+    for &(m, k, n) in &shapes {
+        let a = Mat::from_fn(m, k, |i, j| ((i * k + j) as f64 * 0.013).sin());
+        let b = Mat::from_fn(k, n, |i, j| ((i * n + j) as f64 * 0.007).cos());
+        let gflops = 2.0 * (m * k * n) as f64 / 1e9;
+        let naive_ms = time_ms(1, || {
+            std::hint::black_box(a.matmul_naive(&b));
+        });
+        println!(
+            "  ({m:>4},{k:>5},{n:>4})       naive      -   {naive_ms:>8.1} {:>9.2}       1.00x",
+            gflops / (naive_ms / 1e3)
+        );
+        let c_ref = a.matmul_naive(&b);
+        for threads in [1usize, 2, 4] {
+            wiski::par::set_threads(threads);
+            let blocked_ms = time_ms(2, || {
+                std::hint::black_box(a.matmul_blocked(&b));
+            });
+            let c = a.matmul_blocked(&b);
+            assert_eq!(c.data, c_ref.data, "blocked GEMM must be bitwise exact");
+            println!(
+                "  ({m:>4},{k:>5},{n:>4})     blocked  {threads:>5}   {blocked_ms:>8.1} {:>9.2} {:>10.2}x",
+                gflops / (blocked_ms / 1e3),
+                naive_ms / blocked_ms
+            );
+        }
+        wiski::par::set_threads(0);
+    }
+    println!("(every blocked result checked bitwise against the naive reference)");
+}
+
 // --------------------------------------------------------------- wiski_kuu --
 
 /// Dense vs structured (Kronecker ⊗ Toeplitz) K_UU through the native
@@ -501,9 +556,11 @@ fn ablation_steps(rt: &Arc<dyn Executor>) {
 /// predict cost, at g ∈ {16, 32, 64}, d = 2.  Also streams 1440 points
 /// through the fully instrumented stack and records per-step latency
 /// histograms at n ∈ {144, 576, 1440} — machine-checkable evidence of the
-/// paper's O(1) update claim (p95 must stay flat as n grows 10x).  Results
-/// go to stdout and to BENCH_wiski_kuu.json at the repo root (rows +
-/// `telemetry` snapshot) so the perf trajectory accumulates.
+/// paper's O(1) update claim (p95 must stay flat as n grows 10x), and
+/// sweeps the worker pool (1/2/4 threads) over a g=64, krank≥128 step so
+/// the parallel speedup is citable.  Results go to stdout and to
+/// BENCH_wiski_kuu.json at the repo root (rows + `telemetry` snapshot) so
+/// the perf trajectory accumulates.
 fn wiski_kuu(_rt: &Arc<dyn Executor>) {
     use wiski::runtime::Tensor;
 
@@ -670,6 +727,94 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
         series.first().unwrap().0,
         if o1_claim_held { "HELD" } else { "VIOLATED" }
     );
+    // --- threads sweep: step latency at g=64, krank >= 128, threads 1/2/4 --
+    // A q=32 family reaches the large-krank regime in a handful of steps
+    // (five 32-point batches grow krank to ~160 at r=192).  Per thread count
+    // a fresh backend re-executes the same step — QSystem::build dominates,
+    // so this is the citable speedup for the blocked/parallel compute layer
+    // (read next to the `qsystem.build` histogram in the registry below).
+    let sweep = {
+        let (sg, sr, sq) = (64usize, 192usize, 32usize);
+        let sm = sg * sg;
+        let mut cond_be = NativeBackend::empty();
+        cond_be.add_wiski_family("rbf", 2, sg, sr, sq, 256, false);
+        let step_name = format!("wiski_step_rbf_d2_g{sg}_r{sr}_q{sq}");
+        let mut caches: Vec<Tensor> = vec![
+            Tensor::vec1(vec![0.4f32, 0.6, 0.3, -1.2]),
+            Tensor::zeros(&[sm]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::zeros(&[sm, sr]),
+            Tensor::zeros(&[sr, sr]),
+            Tensor::scalar(0.0),
+        ];
+        let mut rng = wiski::rng::Rng::new(33);
+        let step_inputs = |caches: &[Tensor], rng: &mut wiski::rng::Rng| -> Vec<Tensor> {
+            let mut ins = caches.to_vec();
+            let mut xs = vec![0f32; sq * 2];
+            for v in xs.iter_mut() {
+                *v = rng.range(-0.9, 0.9) as f32;
+            }
+            ins.push(Tensor::new(vec![sq, 2], xs));
+            ins.push(Tensor::vec1((0..sq).map(|_| rng.normal() as f32).collect()));
+            ins.push(Tensor::vec1(vec![1.0; sq]));
+            ins.push(Tensor::vec1(vec![1.0; sq]));
+            ins
+        };
+        let mut krank = 0.0f32;
+        for _ in 0..5 {
+            let ins = step_inputs(&caches, &mut rng);
+            let out = cond_be.exec(&step_name, &ins).unwrap();
+            for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+                *slot = t.clone();
+            }
+            krank = out[5].item();
+        }
+        let sins = step_inputs(&caches, &mut rng);
+        let build_hist = telemetry::histogram("qsystem.build");
+        println!("\n  threads sweep: step latency at g={sg} r={sr} (krank={krank:.0}), q={sq}:");
+        println!("    threads    step_ms   qsystem.build_ms");
+        let mut rows = Vec::new();
+        let mut step1_ms = 0.0f64;
+        for threads in [1usize, 2, 4] {
+            wiski::par::set_threads(threads);
+            // fresh backend per thread count: the QSystem cache must not
+            // short-circuit the very build being measured
+            let mut be = NativeBackend::empty();
+            be.add_wiski_family("rbf", 2, sg, sr, sq, 256, false);
+            let before = build_hist.snapshot();
+            let reps = 2usize;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                be.exec(&step_name, &sins).unwrap();
+            }
+            let step_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            let after = build_hist.snapshot();
+            let d_count = (after.count() - before.count()).max(1) as f64;
+            let build_ms =
+                (after.mean_us() * after.count() as f64 - before.mean_us() * before.count() as f64)
+                    / d_count
+                    / 1e3;
+            if threads == 1 {
+                step1_ms = step_ms;
+            }
+            println!(
+                "    {threads:>7} {step_ms:>10.1} {build_ms:>18.1}   ({:.2}x vs 1 thread)",
+                step1_ms / step_ms
+            );
+            rows.push(format!(
+                "      {{\"threads\": {threads}, \"step_ms\": {step_ms:.2}, \
+                 \"qsystem_build_ms\": {build_ms:.2}, \"speedup_vs_1\": {:.2}}}",
+                step1_ms / step_ms
+            ));
+        }
+        wiski::par::set_threads(0);
+        format!(
+            "{{\"g\": {sg}, \"r\": {sr}, \"q\": {sq}, \"krank\": {krank:.0}, \"series\": [\n{}\n    ]}}",
+            rows.join(",\n")
+        )
+    };
+
     let series_json: Vec<String> = series
         .iter()
         .map(|(n, h, t)| {
@@ -683,7 +828,7 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
         .collect();
     let telemetry_json = format!(
         "{{\n    \"step_latency_vs_n\": [\n{}\n    ],\n    \"p95_flat_ratio\": {p95_flat_ratio:.3},\n    \
-         \"o1_claim_held\": {o1_claim_held},\n    \"registry\": {}\n  }}",
+         \"o1_claim_held\": {o1_claim_held},\n    \"threads_sweep\": {sweep},\n    \"registry\": {}\n  }}",
         series_json.join(",\n"),
         telemetry::snapshot().to_json()
     );
@@ -692,7 +837,8 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
         "{{\n  \"bench\": \"wiski_kuu\",\n  \"d\": 2,\n  \"unit\": \"ms\",\n  \
          \"note\": \"step = QSystem build + theta-grad contraction (q=1); predict = 256-query batch; \
          warm = QSystem cache hit; telemetry.step_latency_vs_n = 64-step windows through the \
-         instrumented stack (g=16 r=64); produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ],\n  \
+         instrumented stack (g=16 r=64); telemetry.threads_sweep = worker-pool step latency at \
+         g=64 krank>=128 over 1/2/4 threads; produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ],\n  \
          \"telemetry\": {}\n}}\n",
         rows_json.join(",\n"),
         telemetry_json

@@ -55,27 +55,11 @@ fn kzz_chol(kernel: &Kernel, theta: &[f64], z: &[Vec<f64>]) -> Cholesky {
     Cholesky::factor_floored(&kzz, KZZ_JITTER)
 }
 
-/// Solve (L_f L_f^T) X = columns of `b` for a factored SPD system.
-fn solve_cols(ch: &Cholesky, b: &Mat) -> Mat {
-    let mut out = Mat::zeros(b.rows, b.cols);
-    let mut col = vec![0.0; b.rows];
-    for j in 0..b.cols {
-        for i in 0..b.rows {
-            col[i] = b[(i, j)];
-        }
-        let sol = ch.solve(&col);
-        for i in 0..b.rows {
-            out[(i, j)] = sol[i];
-        }
-    }
-    out
-}
-
 /// KL( N(q_mu, L L^T) || N(0, K) ) given chol(K); returns (kl, kinv_l)
 /// where kinv_l = K^{-1} L is reused by the gradients.
 fn kl_vs_chol(q_mu: &[f64], l_q: &Mat, chk: &Cholesky) -> (f64, Mat) {
     let m = q_mu.len();
-    let kinv_l = solve_cols(chk, l_q);
+    let kinv_l = chk.solve_cols(l_q);
     let trace: f64 = l_q.data.iter().zip(&kinv_l.data).map(|(a, b)| a * b).sum();
     let kinv_mu = chk.solve(q_mu);
     let maha = dot(q_mu, &kinv_mu);
@@ -95,7 +79,7 @@ fn kl_vs_gaussian(
 ) -> (f64, Mat) {
     let m = q_mu.len();
     // tr((old_l old_l^T)^{-1} L L^T) = sum_ij L_ij * ((oldS)^{-1} L)_ij
-    let olds_inv_l = solve_cols(old_ch, l_q);
+    let olds_inv_l = old_ch.solve_cols(l_q);
     let trace: f64 = l_q.data.iter().zip(&olds_inv_l.data).map(|(a, b)| a * b).sum();
     let dm: Vec<f64> = q_mu.iter().zip(old_mu).map(|(a, b)| a - b).collect();
     let dsol = old_ch.solve_lower(&dm);
@@ -118,7 +102,7 @@ fn marginals(
     x: &[Vec<f64>],
 ) -> (Vec<f64>, Vec<f64>, Mat) {
     let kzx = kmat(kernel, theta, z, x); // m x b
-    let a_cols = solve_cols(chk, &kzx); // m x b
+    let a_cols = chk.solve_cols(&kzx); // m x b, one multi-RHS traversal
     let b = x.len();
     let m = z.len();
     let mut mean = vec![0.0; b];

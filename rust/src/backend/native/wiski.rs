@@ -298,13 +298,10 @@ impl QSystem {
         match &self.kuu {
             KuuOp::Kron(kt) => {
                 // Z = S L_Q^{-T}: Z Z^T = S (Q + eps)^{-1} S^T, so the trace
-                // term is Σ_l z_l^T dK z_l.  Row j of Z solves L z_j = S_j.
-                let mut z = Mat::zeros(m, self.ke);
-                for j in 0..m {
-                    let sol = self.cholq.solve_lower(self.s_mat.row(j));
-                    z.row_mut(j).copy_from_slice(&sol);
-                }
-                let zt = z.transpose(); // ke x m: rows are the z_l columns
+                // term is Σ_l z_l^T dK z_l.  Column j of L^{-1} S^T is
+                // exactly z_j, so one multi-RHS forward solve builds Z^T
+                // (ke x m: rows are the z_l columns) in a single traversal.
+                let zt = self.cholq.solve_lower_cols(&self.s_mat.transpose());
                 let hg = lattice.spacing();
                 let g = lattice.g;
                 let mut sgrad = vec![0.0; td];
@@ -320,10 +317,12 @@ impl QSystem {
                         })
                         .collect();
                     let dk = kt.with_factor(axis, dcol);
+                    // batched: dK applied to every z_l across the pool, then
+                    // the trace accumulates sequentially (fixed order)
+                    let dkz = dk.matvec_rows(&zt);
                     let mut acc = 0.5 * dot(&c_vec, &dk.matvec(&c_vec));
                     for l in 0..self.ke {
-                        let zl = zt.row(l);
-                        acc -= dot(zl, &dk.matvec(zl)) / (2.0 * self.s2);
+                        acc -= dot(zt.row(l), dkz.row(l)) / (2.0 * self.s2);
                     }
                     *gj = acc;
                 }
@@ -332,11 +331,8 @@ impl QSystem {
                 // dense oracle: contract G = 1/2 c c^T - P/(2 s2) against
                 // dK/dθ_j over the m²/2 pairs (the seed path, kept intact)
                 let coords = lattice_coords(lattice);
-                let mut wsol = Mat::zeros(m, self.ke);
-                for j in 0..m {
-                    let sol = self.cholq.solve(self.s_mat.row(j));
-                    wsol.row_mut(j).copy_from_slice(&sol);
-                }
+                // P = S (Q + eps)^{-1} S^T via one multi-RHS solve
+                let wsol = self.cholq.solve_cols(&self.s_mat.transpose()).transpose();
                 let mut dk = vec![0.0; td];
                 for u in 0..m {
                     for v in u..m {
@@ -578,26 +574,34 @@ pub(super) fn predict(
 
     let mut mean = vec![0f32; b];
     let mut var = vec![0f32; b];
-    let mut a2 = vec![0.0f64; sys.ke];
     let _span = telemetry::span("predict.interp");
-    for i in 0..b {
-        let pt: Vec<f64> = (0..d).map(|k| xstar.data[i * d + k] as f64).collect();
-        let taps = lattice.interp_taps(&pt);
-        mean[i] = taps.iter().map(|&(j, wj)| wj * mean_cache[j]).sum::<f64>() as f32;
-        // a2 = S^T K w = (K S)^T w: 4^d sparse combinations of K·S rows
-        a2.iter_mut().for_each(|v| *v = 0.0);
-        for &(j, wj) in &taps {
-            axpy(wj, ks.row(j), &mut a2);
+    let taps_all: Vec<Vec<(usize, f64)>> = (0..b)
+        .map(|i| {
+            let pt: Vec<f64> = (0..d).map(|k| xstar.data[i * d + k] as f64).collect();
+            lattice.interp_taps(&pt)
+        })
+        .collect();
+    // a2_i = S^T K w_i = (K S)^T w_i: 4^d sparse combinations of K·S rows,
+    // gathered for the whole batch so one multi-RHS solve covers every
+    // query point instead of b separate ke×ke solves
+    let mut a2_rows = Mat::zeros(b, sys.ke);
+    for (i, taps) in taps_all.iter().enumerate() {
+        let arow = a2_rows.row_mut(i);
+        for &(j, wj) in taps {
+            axpy(wj, ks.row(j), arow);
         }
-        let qs = sys.cholq.solve(&a2);
+    }
+    let qs_rows = sys.cholq.solve_cols(&a2_rows.transpose()).transpose();
+    for (i, taps) in taps_all.iter().enumerate() {
+        mean[i] = taps.iter().map(|&(j, wj)| wj * mean_cache[j]).sum::<f64>() as f32;
         // w^T K w from the operator entries of the 4^d x 4^d tap block
         let mut wkw = 0.0;
-        for &(j1, w1) in &taps {
-            for &(j2, w2) in &taps {
+        for &(j1, w1) in taps {
+            for &(j2, w2) in taps {
                 wkw += w1 * w2 * sys.kuu.entry(j1, j2);
             }
         }
-        let v = wkw - dot(&a2, &qs) / sys.s2;
+        let v = wkw - dot(a2_rows.row(i), qs_rows.row(i)) / sys.s2;
         var[i] = v.max(1e-10) as f32;
     }
     Ok(vec![

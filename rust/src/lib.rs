@@ -26,6 +26,10 @@
 //! - [`telemetry`]: zero-dependency spans, counters, and log₂ latency
 //!   histograms behind a global registry; `WISKI_TRACE={off,pretty,json}`
 //!   controls per-event emission.
+//! - [`par`]: deterministic scoped worker pool (`WISKI_THREADS` /
+//!   `--threads`) behind the blocked GEMM, batched triangular solves, and
+//!   batched operator matvecs — bitwise-identical results at any thread
+//!   count.
 //! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
 //!   (the paper's §5.3 / §5.4 applications).
 //! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
@@ -59,6 +63,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod optim;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod telemetry;

@@ -109,6 +109,69 @@ impl Cholesky {
         self.solve_upper(&self.solve_lower(b))
     }
 
+    /// Solve L X = B for every column of B in one forward traversal.  Each
+    /// row of L is read once for all right-hand sides (instead of once per
+    /// column), and the inner update runs along contiguous rows of X.
+    /// Per-element operation order matches [`Cholesky::solve_lower`]
+    /// exactly, so the result is bitwise equal to the column-by-column path.
+    pub fn solve_lower_cols(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows, n);
+        let w = b.cols;
+        let mut x = b.clone();
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            let (head, tail) = x.data.split_at_mut(i * w);
+            let xi = &mut tail[..w];
+            for (k, &lik) in lrow[..i].iter().enumerate() {
+                let xk = &head[k * w..(k + 1) * w];
+                for (v, &u) in xi.iter_mut().zip(xk) {
+                    *v -= lik * u;
+                }
+            }
+            let d = lrow[i];
+            for v in xi.iter_mut() {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Solve L^T X = B for every column of B in one backward traversal.
+    /// Works on a pre-transposed copy of L so the k-loop streams one
+    /// contiguous row instead of striding down a column.  Bitwise equal to
+    /// per-column [`Cholesky::solve_upper`].
+    pub fn solve_upper_cols(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows, n);
+        let w = b.cols;
+        let lt = self.l.transpose();
+        let mut x = b.clone();
+        for i in (0..n).rev() {
+            let ltrow = lt.row(i);
+            let (head, tail) = x.data.split_at_mut((i + 1) * w);
+            let xi = &mut head[i * w..];
+            for k in (i + 1)..n {
+                let lki = ltrow[k];
+                let xk = &tail[(k - i - 1) * w..(k - i) * w];
+                for (v, &u) in xi.iter_mut().zip(xk) {
+                    *v -= lki * u;
+                }
+            }
+            let d = ltrow[i];
+            for v in xi.iter_mut() {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Solve (L L^T) X = B for every column of B — the multi-RHS form of
+    /// [`Cholesky::solve`], one traversal per triangle for the whole batch.
+    pub fn solve_cols(&self, b: &Mat) -> Mat {
+        self.solve_upper_cols(&self.solve_lower_cols(b))
+    }
+
     /// log|L L^T| = 2 sum log diag(L).
     pub fn logdet(&self) -> f64 {
         (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
@@ -185,6 +248,30 @@ mod tests {
         ch.extend(&col, a[(8, 8)], 0.0).unwrap();
         let full = Cholesky::factor(&a, 0.0).unwrap();
         assert!(ch.l.max_abs_diff(&full.l) < 1e-9);
+    }
+
+    #[test]
+    fn solve_cols_is_bitwise_equal_to_per_column_solves() {
+        let a = random_spd(17, 4);
+        let ch = Cholesky::factor(&a, 0.0).unwrap();
+        let mut rng = Rng::new(5);
+        for w in [1usize, 3, 17, 30] {
+            let b = Mat::from_fn(17, w, |_, _| rng.normal());
+            let lower = ch.solve_lower_cols(&b);
+            let full = ch.solve_cols(&b);
+            for j in 0..w {
+                let col: Vec<f64> = (0..17).map(|i| b[(i, j)]).collect();
+                let l_ref = ch.solve_lower(&col);
+                let f_ref = ch.solve(&col);
+                for i in 0..17 {
+                    assert_eq!(lower[(i, j)].to_bits(), l_ref[i].to_bits(), "L w={w}");
+                    assert_eq!(full[(i, j)].to_bits(), f_ref[i].to_bits(), "LL^T w={w}");
+                }
+            }
+        }
+        // zero-width batch: shape-preserving no-op
+        let empty = ch.solve_cols(&Mat::zeros(17, 0));
+        assert_eq!((empty.rows, empty.cols), (17, 0));
     }
 
     #[test]

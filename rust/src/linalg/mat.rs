@@ -70,29 +70,86 @@ impl Mat {
         out
     }
 
-    /// self * other (blocked i-k-j loop; good enough for baseline sizes).
+    /// self * other.  Dispatches to the cache-blocked parallel kernel
+    /// ([`Mat::matmul_blocked`]) above a small flop threshold where packing
+    /// pays for itself, and to the straight-line reference below it.  Both
+    /// paths accumulate each output element over k in ascending order with
+    /// plain IEEE mul+add, so the result is bitwise identical either way —
+    /// and at any thread count.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
-        let mut out = Mat::zeros(self.rows, other.cols);
+        if self.rows * self.cols * other.cols < GEMM_DISPATCH_FLOPS {
+            self.matmul_naive(other)
+        } else {
+            self.matmul_blocked(other)
+        }
+    }
+
+    /// Reference i-k-j product, kept as the oracle the blocked kernel is
+    /// property-tested against.  The old `a == 0.0` skip branch is gone: it
+    /// defeated autovectorization on dense inputs, and adding `±0·b` to a
+    /// running sum that starts at +0 is a bitwise no-op anyway.
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let n = other.cols;
+        let mut out = Mat::zeros(self.rows, n);
         for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
+            let arow = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a) in arow.iter().enumerate() {
+                let orow = &other.data[k * n..(k + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
                 }
-                let orow = other.row(k);
-                let out_row = out.row_mut(i);
-                super::axpy(a, orow, out_row);
             }
         }
         out
     }
 
+    /// Cache-blocked microkernel GEMM, parallelized over row blocks
+    /// (GotoBLAS loop order: columns NC → depth KC → row panels MC, with B
+    /// packed once per (KC, NC) tile and A packed per row panel).  Each
+    /// output element still accumulates over k strictly ascending, so this
+    /// is bitwise equal to [`Mat::matmul_naive`].
+    pub fn matmul_blocked(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (k, n) = (self.cols, other.cols);
+        let mut out = Mat::zeros(self.rows, n);
+        if self.rows == 0 || k == 0 || n == 0 {
+            return out;
+        }
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                let bpack = pack_b(other, pc, kc, jc, nc);
+                // each chunk owns MC full rows of `out` — disjoint writes,
+                // fixed boundaries, so the fan-out is deterministic
+                crate::par::par_chunks_mut(&mut out.data, MC * n, |ci, chunk| {
+                    gemm_row_panel(self, ci * MC, pc, kc, jc, nc, &bpack, chunk, n);
+                });
+            }
+        }
+        out
+    }
+
+    /// Blocked transpose: walk TB×TB tiles so both the read rows and the
+    /// write columns stay resident in cache (the same tile pattern the GEMM
+    /// A-panel packing uses).  Pure copy — no arithmetic, exact.
     pub fn transpose(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
+        const TB: usize = 32;
+        let (r, c) = (self.rows, self.cols);
+        let mut out = Mat::zeros(c, r);
+        for ib in (0..r).step_by(TB) {
+            let imax = (ib + TB).min(r);
+            for jb in (0..c).step_by(TB) {
+                let jmax = (jb + TB).min(c);
+                for i in ib..imax {
+                    let row = &self.data[i * c..(i + 1) * c];
+                    for j in jb..jmax {
+                        out.data[j * r + i] = row[j];
+                    }
+                }
             }
         }
         out
@@ -114,6 +171,113 @@ impl Mat {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f64::max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked-GEMM internals.
+// ---------------------------------------------------------------------------
+
+/// Microkernel register tile: MR rows × NR columns of C.
+const MR: usize = 4;
+const NR: usize = 8;
+/// Cache blocking: MC rows of A per panel (L2), KC depth per pass (L1 for
+/// the packed B strips), NC columns of B per pass (L3 / keeps bpack small).
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 256;
+/// Below this m·k·n the packing overhead beats the cache wins; use the
+/// straight-line kernel.  32³ = the smallest shape where blocking paid in
+/// the `gemm` bench.
+const GEMM_DISPATCH_FLOPS: usize = 32 * 1024;
+
+/// Pack B[pc..pc+kc, jc..jc+nc] into NR-column strips: strip s holds, for p
+/// ascending, the NR values B[pc+p, jc+s·NR ..], zero-padded on the right
+/// edge.  Reads are contiguous along B's rows; the microkernel then streams
+/// each strip front to back.
+fn pack_b(b: &Mat, pc: usize, kc: usize, jc: usize, nc: usize) -> Vec<f64> {
+    let n_strips = nc.div_ceil(NR);
+    let mut pack = vec![0.0; n_strips * kc * NR];
+    for s in 0..n_strips {
+        let j0 = jc + s * NR;
+        let width = NR.min(jc + nc - j0);
+        let strip = &mut pack[s * kc * NR..(s + 1) * kc * NR];
+        for p in 0..kc {
+            let brow = &b.data[(pc + p) * b.cols + j0..(pc + p) * b.cols + j0 + width];
+            strip[p * NR..p * NR + width].copy_from_slice(brow);
+        }
+    }
+    pack
+}
+
+/// One MC-row panel of C for the current (pc, jc) tile: pack the A panel
+/// into MR-row strips, then run the register microkernel over the
+/// MR×NR grid.  `cchunk` holds the panel's full rows of C (leading
+/// dimension `ldc`); only columns [jc, jc+nc) are touched.
+#[allow(clippy::too_many_arguments)]
+fn gemm_row_panel(
+    a: &Mat,
+    i0: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &[f64],
+    cchunk: &mut [f64],
+    ldc: usize,
+) {
+    let mrows = cchunk.len() / ldc;
+    // Pack A[i0..i0+mrows, pc..pc+kc] into MR-row strips: strip r holds,
+    // for p ascending, the MR values A[i0+r·MR .. , pc+p], zero-padded on
+    // the bottom edge (reads run along A's rows; writes are the same
+    // tile-local scatter as the blocked transpose).
+    let n_astrips = mrows.div_ceil(MR);
+    let mut apack = vec![0.0; n_astrips * kc * MR];
+    for r in 0..n_astrips {
+        let strip = &mut apack[r * kc * MR..(r + 1) * kc * MR];
+        for i in 0..MR.min(mrows - r * MR) {
+            let arow = &a.data[(i0 + r * MR + i) * a.cols + pc..][..kc];
+            for (p, &v) in arow.iter().enumerate() {
+                strip[p * MR + i] = v;
+            }
+        }
+    }
+    for r in 0..n_astrips {
+        let astrip = &apack[r * kc * MR..(r + 1) * kc * MR];
+        let mr = MR.min(mrows - r * MR);
+        for s in 0..nc.div_ceil(NR) {
+            let bstrip = &bpack[s * kc * NR..(s + 1) * kc * NR];
+            let j0 = jc + s * NR;
+            let nr = NR.min(jc + nc - j0);
+            // load the C tile (edge tiles clip; padded lanes stay 0 because
+            // the padded A rows / B columns are 0)
+            let mut acc = [0.0f64; MR * NR];
+            for i in 0..mr {
+                let crow = &cchunk[(r * MR + i) * ldc + j0..][..nr];
+                acc[i * NR..i * NR + nr].copy_from_slice(crow);
+            }
+            microkernel(astrip, bstrip, kc, &mut acc);
+            for i in 0..mr {
+                let crow = &mut cchunk[(r * MR + i) * ldc + j0..][..nr];
+                crow.copy_from_slice(&acc[i * NR..i * NR + nr]);
+            }
+        }
+    }
+}
+
+/// MR×NR register tile update: acc += A-strip · B-strip over kc depth
+/// steps, p ascending — the accumulation order every other path shares.
+#[inline]
+fn microkernel(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
+    for p in 0..kc {
+        let av = &astrip[p * MR..p * MR + MR];
+        let bv = &bstrip[p * NR..p * NR + NR];
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i * NR + j] += ai * bv[j];
+            }
+        }
     }
 }
 
@@ -150,6 +314,54 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_definition_on_odd_shapes() {
+        for (r, c) in [(1usize, 5usize), (5, 1), (33, 47), (64, 64), (70, 3)] {
+            let a = Mat::from_fn(r, c, |i, j| (i * 131 + j * 17) as f64 * 0.25);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t[(j, i)], a[(i, j)], "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_is_bitwise_equal_to_naive() {
+        // covers register-tile edges (non-multiples of MR/NR), 1×k / k×1
+        // degenerates, and a shape crossing the KC depth boundary
+        for (m, k, n) in [
+            (1usize, 7usize, 1usize),
+            (1, 300, 9),
+            (9, 1, 13),
+            (5, 260, 11),
+            (67, 33, 41),
+            (13, 13, 13),
+        ] {
+            let a = Mat::from_fn(m, k, |i, j| ((i * k + j) as f64 * 0.37).sin());
+            let b = Mat::from_fn(k, n, |i, j| ((i * n + j) as f64 * 0.91).cos());
+            let fast = a.matmul_blocked(&b);
+            let slow = a.matmul_naive(&b);
+            assert_eq!(fast.data, slow.data, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_handles_dense_zeros_exactly() {
+        // the old kernel special-cased a == 0.0; the new one must produce
+        // the same results without the branch
+        let a = Mat::from_fn(40, 40, |i, j| if (i + j) % 3 == 0 { 0.0 } else { 1.5 });
+        let b = Mat::from_fn(40, 40, |i, j| if i == j { 2.0 } else { 0.0 });
+        let c = a.matmul(&b);
+        let c_ref = a.matmul_naive(&b);
+        assert_eq!(c.data, c_ref.data);
+        let z = Mat::zeros(40, 40);
+        assert_eq!(a.matmul(&z).data, vec![0.0; 40 * 40]);
+        assert_eq!(z.matmul(&a).data, vec![0.0; 40 * 40]);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! Kronecker-over-dimensions product of per-dimension symmetric Toeplitz
 //! factors (`Kron` — the default WISKI path, applied in O(d · m log g) via
 //! [`ToeplitzMatvec`] without ever materializing the m×m matrix).
+//!
+//! The dense hot paths run on the blocked compute layer: `Mat::matmul` is a
+//! cache-blocked microkernel GEMM, `Cholesky::solve_cols` amortizes one
+//! triangular traversal across all right-hand sides, and the batched
+//! operator products fan rows across [`crate::par`]'s deterministic worker
+//! pool — all bitwise identical to their single-threaded reference forms.
 
 mod cg;
 mod chol;
@@ -26,7 +32,7 @@ pub use chol::Cholesky;
 pub use fft::{fft_inplace, ifft_inplace};
 pub use lanczos::{lanczos, LanczosResult};
 pub use mat::Mat;
-pub use ops::{KroneckerToeplitz, KuuOp};
+pub use ops::{KronScratch, KroneckerToeplitz, KuuOp};
 pub use toeplitz::ToeplitzMatvec;
 
 /// Dot product.

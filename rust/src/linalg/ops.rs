@@ -46,26 +46,14 @@ impl KuuOp {
         }
     }
 
-    /// K · B, column by column for the structured variant.
+    /// K · B, batched.  Dense goes through the blocked GEMM; the structured
+    /// variant transposes B so each right-hand side is one contiguous row,
+    /// then fans the circulant matvecs across the worker pool with per-chunk
+    /// FFT scratch ([`KroneckerToeplitz::matvec_rows`]).
     pub fn matmul(&self, b: &Mat) -> Mat {
         match self {
             KuuOp::Dense(m) => m.matmul(b),
-            KuuOp::Kron(k) => {
-                let n = k.n();
-                assert_eq!(b.rows, n);
-                let mut out = Mat::zeros(n, b.cols);
-                let mut col = vec![0.0; n];
-                for j in 0..b.cols {
-                    for i in 0..n {
-                        col[i] = b[(i, j)];
-                    }
-                    let kc = k.matvec(&col);
-                    for i in 0..n {
-                        out[(i, j)] = kc[i];
-                    }
-                }
-                out
-            }
+            KuuOp::Kron(k) => k.matvec_rows(&b.transpose()).transpose(),
         }
     }
 
@@ -84,6 +72,20 @@ impl KuuOp {
             KuuOp::Kron(k) => k.to_dense(),
         }
     }
+}
+
+/// Reusable workspace for [`KroneckerToeplitz::matvec_with`]: ping-pong
+/// mode buffers, a fiber staging pair, and FFT scratch.  Built by
+/// [`KroneckerToeplitz::scratch`]; every buffer is fully overwritten on each
+/// use, so one scratch can serve an arbitrary sequence of matvecs (each
+/// worker thread in [`KroneckerToeplitz::matvec_rows`] owns its own).
+pub struct KronScratch {
+    x: Vec<f64>,
+    y: Vec<f64>,
+    fiber_in: Vec<f64>,
+    fiber_out: Vec<f64>,
+    re: Vec<f64>,
+    im: Vec<f64>,
 }
 
 /// ⊗_k T_k with symmetric-Toeplitz factors applied via circulant FFTs.
@@ -155,6 +157,86 @@ impl KroneckerToeplitz {
         x
     }
 
+    /// Allocate reusable workspace for [`KroneckerToeplitz::matvec_with`]:
+    /// ping-pong mode buffers plus fiber and FFT scratch sized to the
+    /// largest factor.  One scratch serves any number of sequential matvecs
+    /// against this operator (every buffer is fully overwritten per use).
+    pub fn scratch(&self) -> KronScratch {
+        let max_g = self.sizes.iter().copied().max().unwrap_or(1);
+        let max_len = self.factors.iter().map(ToeplitzMatvec::fft_len).max().unwrap_or(1);
+        KronScratch {
+            x: vec![0.0; self.m],
+            y: vec![0.0; self.m],
+            fiber_in: vec![0.0; max_g],
+            fiber_out: vec![0.0; max_g],
+            re: vec![0.0; max_len],
+            im: vec![0.0; max_len],
+        }
+    }
+
+    /// [`KroneckerToeplitz::matvec`] into `out`, reusing `sc` instead of
+    /// allocating — bitwise identical arithmetic, zero allocation.  This is
+    /// the per-row kernel `matvec_rows` amortizes scratch over.
+    pub fn matvec_with(&self, v: &[f64], out: &mut [f64], sc: &mut KronScratch) {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(out.len(), self.m);
+        let KronScratch { x, y, fiber_in, fiber_out, re, im } = sc;
+        if self.factors.len() == 1 {
+            let t = &self.factors[0];
+            t.matvec_into(v, out, &mut re[..t.fft_len()], &mut im[..t.fft_len()]);
+            return;
+        }
+        x.copy_from_slice(v);
+        let mut stride = self.m;
+        let mut outer = 1usize;
+        for (k, t) in self.factors.iter().enumerate() {
+            let nk = self.sizes[k];
+            stride /= nk;
+            let flen = t.fft_len();
+            for o in 0..outer {
+                let base = o * nk * stride;
+                for s in 0..stride {
+                    for (j, f) in fiber_in[..nk].iter_mut().enumerate() {
+                        *f = x[base + j * stride + s];
+                    }
+                    t.matvec_into(
+                        &fiber_in[..nk],
+                        &mut fiber_out[..nk],
+                        &mut re[..flen],
+                        &mut im[..flen],
+                    );
+                    for (j, val) in fiber_out[..nk].iter().enumerate() {
+                        y[base + j * stride + s] = *val;
+                    }
+                }
+            }
+            std::mem::swap(x, y);
+            outer *= nk;
+        }
+        out.copy_from_slice(&x[..]);
+    }
+
+    /// Apply the operator to every **row** of `b` (each row is one
+    /// contiguous right-hand side): out.row(i) = K · b.row(i).  Rows are
+    /// fanned across the worker pool in fixed chunks — each chunk carries
+    /// its own [`KronScratch`], and rows never share state, so the result is
+    /// bitwise identical at any thread count.
+    pub fn matvec_rows(&self, b: &Mat) -> Mat {
+        assert_eq!(b.cols, self.m);
+        /// Rows per dispatch unit: small enough to balance load, large
+        /// enough to amortize the per-chunk scratch allocation.
+        const ROW_CHUNK: usize = 8;
+        let mut out = Mat::zeros(b.rows, self.m);
+        crate::par::par_chunks_mut(&mut out.data, ROW_CHUNK * self.m, |ci, chunk| {
+            let mut sc = self.scratch();
+            let r0 = ci * ROW_CHUNK;
+            for (k, orow) in chunk.chunks_mut(self.m).enumerate() {
+                self.matvec_with(b.row(r0 + k), orow, &mut sc);
+            }
+        });
+        out
+    }
+
     /// Single entry K[i, j] = Π_k cols[k][|i_k − j_k|], O(d).
     pub fn entry(&self, i: usize, j: usize) -> f64 {
         let (mut ri, mut rj, mut v) = (i, j, 1.0);
@@ -215,6 +297,34 @@ mod tests {
         for (i, j) in [(0usize, 0usize), (2, 9), (13, 5), (19, 19)] {
             assert!((op.entry(i, j) - dense.entry(i, j)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn matvec_with_and_rows_are_bitwise_equal_to_matvec() {
+        for sizes in [vec![7usize], vec![4, 3], vec![3, 4, 5]] {
+            let kt = KroneckerToeplitz::new(random_cols(&sizes, 41));
+            let m = kt.n();
+            let mut rng = Rng::new(42);
+            let b = Mat::from_fn(19, m, |_, _| rng.normal());
+            let batched = kt.matvec_rows(&b);
+            let mut sc = kt.scratch();
+            let mut out = vec![0.0; m];
+            for i in 0..b.rows {
+                let one = kt.matvec(b.row(i));
+                kt.matvec_with(b.row(i), &mut out, &mut sc);
+                for j in 0..m {
+                    assert_eq!(out[j].to_bits(), one[j].to_bits(), "sizes {sizes:?}");
+                    assert_eq!(batched[(i, j)].to_bits(), one[j].to_bits(), "sizes {sizes:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_rows_handles_empty_batch() {
+        let kt = KroneckerToeplitz::new(random_cols(&[4, 3], 43));
+        let out = kt.matvec_rows(&Mat::zeros(0, kt.n()));
+        assert_eq!((out.rows, out.cols), (0, kt.n()));
     }
 
     #[test]

@@ -31,20 +31,45 @@ impl ToeplitzMatvec {
         Self { n, len, spec_re: re, spec_im: im }
     }
 
+    /// Operator dimension n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Length of the FFT workspace `matvec_into` requires.
+    pub fn fft_len(&self) -> usize {
+        self.len
+    }
+
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        assert_eq!(v.len(), self.n);
+        let mut out = vec![0.0; self.n];
         let mut re = vec![0.0; self.len];
         let mut im = vec![0.0; self.len];
+        self.matvec_into(v, &mut out, &mut re, &mut im);
+        out
+    }
+
+    /// `matvec` into a caller-provided output with caller-provided FFT
+    /// scratch (`re`/`im` of length [`ToeplitzMatvec::fft_len`]) — the
+    /// allocation-free form the batched Kronecker matvecs loop over.  All
+    /// buffers are fully overwritten, so scratch can be reused freely
+    /// across calls (and across rows on different worker threads).
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64], re: &mut [f64], im: &mut [f64]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        assert_eq!(re.len(), self.len);
+        assert_eq!(im.len(), self.len);
         re[..self.n].copy_from_slice(v);
-        fft_inplace(&mut re, &mut im);
+        re[self.n..].fill(0.0);
+        im.fill(0.0);
+        fft_inplace(re, im);
         for i in 0..self.len {
             let (ar, ai) = (re[i], im[i]);
             re[i] = ar * self.spec_re[i] - ai * self.spec_im[i];
             im[i] = ar * self.spec_im[i] + ai * self.spec_re[i];
         }
-        ifft_inplace(&mut re, &mut im);
-        re.truncate(self.n);
-        re
+        ifft_inplace(re, im);
+        out.copy_from_slice(&re[..self.n]);
     }
 }
 
@@ -67,5 +92,24 @@ mod tests {
         for (a, b) in fast.iter().zip(&slow) {
             assert!((a - b).abs() < 1e-10, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn matvec_into_reuses_dirty_scratch_bitwise() {
+        let n = 17;
+        let col: Vec<f64> = (0..n).map(|k| 1.0 / (1.0 + k as f64)).collect();
+        let t = ToeplitzMatvec::new(&col);
+        let mut rng = Rng::new(3);
+        let v1: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let v2: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut out = vec![f64::NAN; n];
+        let mut re = vec![f64::NAN; t.fft_len()];
+        let mut im = vec![f64::NAN; t.fft_len()];
+        // scratch starts poisoned, then stays dirty from the first call —
+        // both results must still match the allocating path exactly
+        t.matvec_into(&v1, &mut out, &mut re, &mut im);
+        assert_eq!(out, t.matvec(&v1));
+        t.matvec_into(&v2, &mut out, &mut re, &mut im);
+        assert_eq!(out, t.matvec(&v2));
     }
 }

@@ -33,10 +33,13 @@ const USAGE: &str = "usage: wiski [info|serve|check] [flags]
 flags:
   --backend native|pjrt    execution engine (default: native or WISKI_BACKEND)
   --artifacts DIR          artifact directory for the pjrt backend
+  --threads N              worker threads for the blocked compute layer
+                           (default: WISKI_THREADS or all cores)
   -h, --help               print this help
 environment:
   WISKI_TRACE=off|pretty|json   telemetry emission (default off)
-  WISKI_KUU=dense               force the dense K_UU oracle (native backend)";
+  WISKI_KUU=dense               force the dense K_UU oracle (native backend)
+  WISKI_THREADS=N               worker threads (overridden by --threads)";
 
 /// Parsed command line: strict — every token must be consumed.
 struct Cli {
@@ -44,6 +47,7 @@ struct Cli {
     backend: Option<String>,
     artifacts: String,
     stream: Option<usize>,
+    threads: Option<usize>,
 }
 
 fn die(msg: &str) -> ! {
@@ -52,8 +56,13 @@ fn die(msg: &str) -> ! {
 }
 
 fn parse_cli(args: &[String]) -> Cli {
-    let mut cli =
-        Cli { cmd: String::new(), backend: None, artifacts: "artifacts".into(), stream: None };
+    let mut cli = Cli {
+        cmd: String::new(),
+        backend: None,
+        artifacts: "artifacts".into(),
+        stream: None,
+        threads: None,
+    };
     let mut it = args.iter().skip(1);
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -73,6 +82,12 @@ fn parse_cli(args: &[String]) -> Cli {
                 Some(n) => cli.stream = Some(n),
                 None => die("--stream requires a positive integer"),
             },
+            "--threads" => {
+                match it.next().and_then(|v| v.parse::<usize>().ok()).filter(|&n| n >= 1) {
+                    Some(n) => cli.threads = Some(n),
+                    None => die("--threads requires a positive integer"),
+                }
+            }
             flag if flag.starts_with('-') => die(&format!("unknown flag {flag:?}")),
             cmd if cli.cmd.is_empty() => match cmd {
                 "info" | "serve" | "check" => cli.cmd = cmd.to_string(),
@@ -93,6 +108,9 @@ fn parse_cli(args: &[String]) -> Cli {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let cli = parse_cli(&args);
+    if let Some(n) = cli.threads {
+        wiski::par::set_threads(n);
+    }
     let rt = match &cli.backend {
         Some(name) => backend_by_name(name, &cli.artifacts)?,
         None => default_backend(&cli.artifacts)?,

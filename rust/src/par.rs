@@ -1,0 +1,209 @@
+//! Deterministic scoped worker pool for the blocked compute layer.
+//!
+//! Zero-dependency data parallelism over `std::thread::scope`: callers hand
+//! a mutable slice plus a *fixed* chunk length, and every chunk is processed
+//! exactly once with exclusive access to its sub-slice.  Two properties make
+//! this safe to drop into numeric hot paths:
+//!
+//! - **Determinism at any thread count.**  The chunk boundaries depend only
+//!   on `chunk_len`, never on how many workers run; each chunk's output
+//!   region is disjoint; and no reduction ever crosses a chunk boundary.
+//!   `WISKI_THREADS=1` and `WISKI_THREADS=64` therefore produce bitwise
+//!   identical results — the integration suite asserts exactly that.
+//! - **No persistent pool, no channels.**  Workers are scoped threads that
+//!   borrow the caller's data directly (`std::thread::scope`), so there is
+//!   no queue to drain, no Arc wrapping, and panics propagate at the join.
+//!
+//! Sizing: the `set_threads` override (the CLI's `--threads`) wins, then the
+//! `WISKI_THREADS` environment variable, then `available_parallelism()`.
+//! The override is a plain atomic so benches can sweep thread counts within
+//! one process.
+//!
+//! Telemetry: every parallel dispatch bumps the `par.tasks` counter by the
+//! number of chunks fanned out and records the backlog (chunks beyond the
+//! ones immediately running) in the `par.queue_depth` gauge; `par.threads`
+//! tracks the worker count actually used.  Handles are cached so the hot
+//! path never touches the registry lock.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::telemetry::{self, Counter, Gauge};
+
+/// Process-wide override set by `set_threads`; 0 means "no override".
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count (the CLI's `--threads` flag and the bench
+/// sweeps call this).  `0` clears the override, falling back to
+/// `WISKI_THREADS` / `available_parallelism`.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// `WISKI_THREADS`, parsed once; 0 when unset or invalid (with a warning —
+/// a silently ignored knob is an observability bug).
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("WISKI_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("wiski: ignoring WISKI_THREADS={v:?} (want a positive integer)");
+                0
+            }
+        },
+        Err(_) => 0,
+    })
+}
+
+/// Worker count the next dispatch will size itself to:
+/// `set_threads` override > `WISKI_THREADS` > `available_parallelism()`.
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    let e = env_threads();
+    if e > 0 {
+        return e;
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+struct PoolStats {
+    tasks: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    threads: Arc<Gauge>,
+}
+
+fn stats() -> &'static PoolStats {
+    static S: OnceLock<PoolStats> = OnceLock::new();
+    S.get_or_init(|| PoolStats {
+        tasks: telemetry::counter("par.tasks"),
+        queue_depth: telemetry::gauge("par.queue_depth"),
+        threads: telemetry::gauge("par.threads"),
+    })
+}
+
+/// Split `data` into consecutive chunks of `chunk_len` elements (the last
+/// may be shorter) and call `f(chunk_index, chunk)` for every chunk, fanning
+/// the chunks across the worker pool.  The calling thread always executes
+/// the final partition itself, so a 1-thread configuration never spawns.
+///
+/// Chunk boundaries are a pure function of `chunk_len` and `data.len()` —
+/// NOT of the thread count — and chunks never share output elements, so the
+/// result is bitwise identical however many workers run.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = num_threads().min(n_chunks).max(1);
+    if threads <= 1 {
+        for (idx, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(idx, chunk);
+        }
+        return;
+    }
+    let st = stats();
+    st.tasks.add(n_chunks as u64);
+    st.queue_depth.set((n_chunks - threads) as u64);
+    st.threads.set(threads as u64);
+    // Static contiguous partition: worker w takes `per (+1)` whole chunks.
+    // Assignment of chunks to workers is load-balancing only — it cannot
+    // affect results because every chunk computes independently.
+    let per = n_chunks / threads;
+    let extra = n_chunks % threads;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut chunk_base = 0usize;
+        for w in 0..threads {
+            let w_chunks = per + usize::from(w < extra);
+            let elems = (w_chunks * chunk_len).min(rest.len());
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut(elems);
+            rest = tail;
+            let base = chunk_base;
+            chunk_base += w_chunks;
+            let fref = &f;
+            if w + 1 < threads {
+                scope.spawn(move || run_chunks(head, chunk_len, base, fref));
+            } else {
+                // the caller is the last worker: no idle spin, no extra spawn
+                run_chunks(head, chunk_len, base, fref);
+            }
+        }
+    });
+}
+
+fn run_chunks<T, F: Fn(usize, &mut [T])>(part: &mut [T], chunk_len: usize, base: usize, f: &F) {
+    for (k, chunk) in part.chunks_mut(chunk_len).enumerate() {
+        f(base + k, chunk);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes tests that mutate the process-wide thread override.
+    fn config_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn override_beats_env_and_auto() {
+        let _g = config_lock();
+        set_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_threads(1);
+        assert_eq!(num_threads(), 1);
+        set_threads(0);
+        assert!(num_threads() >= 1, "auto detection must report >= 1");
+    }
+
+    #[test]
+    fn chunks_cover_slice_once_each() {
+        let _g = config_lock();
+        for threads in [1usize, 2, 5] {
+            set_threads(threads);
+            for len in [0usize, 1, 7, 64, 100] {
+                for chunk in [1usize, 3, 16, 200] {
+                    let mut data = vec![0u32; len];
+                    par_chunks_mut(&mut data, chunk, |idx, part| {
+                        for (k, v) in part.iter_mut().enumerate() {
+                            // record which chunk wrote each element
+                            *v = (idx * chunk + k + 1) as u32;
+                        }
+                    });
+                    let expect: Vec<u32> = (1..=len as u32).collect();
+                    assert_eq!(data, expect, "threads={threads} len={len} chunk={chunk}");
+                }
+            }
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let _g = config_lock();
+        let run = |threads: usize| -> Vec<f64> {
+            set_threads(threads);
+            let mut data = vec![0.0f64; 1003];
+            par_chunks_mut(&mut data, 17, |idx, part| {
+                for (k, v) in part.iter_mut().enumerate() {
+                    *v = ((idx * 17 + k) as f64).sin();
+                }
+            });
+            data
+        };
+        let a = run(1);
+        let b = run(4);
+        set_threads(0);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

@@ -1,0 +1,169 @@
+//! Parallel blocked compute layer acceptance suite: the cache-blocked GEMM,
+//! the batched operator matvecs, and the whole step/predict vertical slice
+//! must be **bitwise identical** to their single-threaded reference forms at
+//! every thread count.  Determinism is the contract that makes the worker
+//! pool safe to size from the environment: `WISKI_THREADS=1` and
+//! `WISKI_THREADS=8` are the same program, just faster.
+//!
+//! The tests drive the same sizing knob the env var feeds
+//! (`par::set_threads` overrides `WISKI_THREADS`, which overrides the core
+//! count); ci.sh additionally runs the structured and telemetry suites under
+//! `WISKI_THREADS=4` to exercise the env-parsing path for real.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use wiski::backend::{Executor, NativeBackend};
+use wiski::gp::ski::Lattice;
+use wiski::kernels::Kernel;
+use wiski::linalg::{KroneckerToeplitz, Mat};
+use wiski::par;
+use wiski::rng::Rng;
+use wiski::runtime::Tensor;
+
+/// Tests in this file mutate the process-wide thread override; serialize
+/// them and always restore the default (0 = env/auto) on the way out.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_mat(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Property test: the blocked microkernel GEMM (and the dispatching
+/// `matmul`) is bitwise equal to the retained naive triple loop across
+/// degenerate and non-multiple-of-block shapes, at 1 and 3 worker threads.
+/// Both kernels accumulate each C element strictly k-ascending, so the
+/// comparison is `==` on the raw f64 payload — no tolerance.
+#[test]
+fn blocked_gemm_matches_naive_across_shapes_and_threads() {
+    let _g = lock();
+    let mut rng = Rng::new(41);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 40_000, 1),   // single dot product longer than any KC block
+        (130, 1, 3),      // k=1: every microkernel update is one rank-1 step
+        (37, 41, 43),     // odd everything
+        (64, 256, 64),    // exact MC/KC boundary
+        (100, 300, 17),   // row blocks split unevenly across workers
+        (5, 7, 1_000),    // wide C spanning several NC panels
+    ];
+    for &(m, k, n) in shapes {
+        let a = random_mat(m, k, &mut rng);
+        let b = random_mat(k, n, &mut rng);
+        let slow = a.matmul_naive(&b);
+        for threads in [1usize, 3] {
+            par::set_threads(threads);
+            let fast = a.matmul_blocked(&b);
+            assert_eq!(
+                fast.data, slow.data,
+                "blocked GEMM diverged from naive at ({m},{k},{n}) threads={threads}"
+            );
+            let dispatched = a.matmul(&b);
+            assert_eq!(
+                dispatched.data, slow.data,
+                "dispatching matmul diverged at ({m},{k},{n}) threads={threads}"
+            );
+        }
+    }
+    par::set_threads(0);
+}
+
+/// The batched Kronecker–Toeplitz row matvec must be invariant to the
+/// worker count and bitwise equal to the one-vector-at-a-time reference.
+#[test]
+fn kron_matvec_rows_is_thread_count_invariant() {
+    let _g = lock();
+    let mut rng = Rng::new(7);
+    let kernel = Kernel::Rbf { dim: 2 };
+    let g = 8usize;
+    let lat = Lattice::new(g, 2);
+    let theta = kernel.default_theta(0.2);
+    let kt = KroneckerToeplitz::new(kernel.kuu_toeplitz_cols(&theta, g, lat.spacing()));
+    let m = kt.n();
+    for rows in [1usize, 5, 17] {
+        let b = random_mat(rows, m, &mut rng);
+        let ref_rows: Vec<Vec<f64>> = (0..rows).map(|i| kt.matvec(b.row(i))).collect();
+        let reference = Mat::from_fn(rows, m, |i, j| ref_rows[i][j]);
+        for threads in [1usize, 2, 8] {
+            par::set_threads(threads);
+            let batched = kt.matvec_rows(&b);
+            assert_eq!(
+                batched.data, reference.data,
+                "matvec_rows diverged at rows={rows} threads={threads}"
+            );
+        }
+    }
+    par::set_threads(0);
+}
+
+/// Stream 30 observations through the step artifact and finish with a
+/// 256-query predict, returning every output tensor the backend produced.
+fn run_stream() -> Vec<Tensor> {
+    let (g, r) = (16usize, 64usize);
+    let m = g * g;
+    let mut be = NativeBackend::empty();
+    be.add_wiski_family("rbf", 2, g, r, 1, 256, false);
+    let step = format!("wiski_step_rbf_d2_g{g}_r{r}_q1");
+    let pred = format!("wiski_predict_rbf_d2_g{g}_r{r}_b256");
+
+    let mut caches: Vec<Tensor> = vec![
+        Tensor::vec1(vec![0.4f32, 0.6, 0.3, -1.2]),
+        Tensor::zeros(&[m]),
+        Tensor::scalar(0.0),
+        Tensor::scalar(0.0),
+        Tensor::zeros(&[m, r]),
+        Tensor::zeros(&[r, r]),
+        Tensor::scalar(0.0),
+    ];
+    let mut rng = Rng::new(1234);
+    let mut collected = Vec::new();
+    for _ in 0..30 {
+        let mut ins = caches.clone();
+        ins.push(Tensor::new(
+            vec![1, 2],
+            vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+        ));
+        ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        let out = be.exec(&step, &ins).unwrap();
+        for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+            *slot = t.clone();
+        }
+        collected.extend(out);
+    }
+    let mut pins = caches.clone();
+    let mut xs = vec![0f32; 256 * 2];
+    for v in xs.iter_mut() {
+        *v = rng.range(-0.9, 0.9) as f32;
+    }
+    pins.push(Tensor::new(vec![256, 2], xs));
+    collected.extend(be.exec(&pred, &pins).unwrap());
+    collected
+}
+
+/// ISSUE satellite: `WISKI_THREADS=1` and `WISKI_THREADS=8` must produce
+/// bitwise-identical step/predict outputs on a 30-point stream.  The fixed
+/// chunk partitioner assigns work by position, not by worker, so every
+/// f32 the backend emits — posterior means, variances, all six cache
+/// tensors at every step — has the same bit pattern at both settings.
+#[test]
+fn stream_outputs_are_bitwise_identical_at_1_and_8_threads() {
+    let _g = lock();
+    par::set_threads(1);
+    let serial = run_stream();
+    par::set_threads(8);
+    let parallel = run_stream();
+    par::set_threads(0);
+    assert_eq!(serial.len(), parallel.len(), "output tensor counts differ");
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a.shape, b.shape, "tensor {i} shape differs");
+        let bits_a: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "tensor {i} is not bitwise identical");
+    }
+}
