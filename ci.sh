@@ -54,19 +54,22 @@ else
     echo "(python3 not available: skipping strict JSON validation)"
 fi
 
-echo "== structured + telemetry suites under WISKI_THREADS=4 =="
+echo "== structured + telemetry + gradcheck suites under WISKI_THREADS=4 =="
 # The Kronecker/Toeplitz operator suite is the guard against silent numeric
-# drift between the structured default path and the dense oracle; run it by
-# name so a filtered or skipped test file cannot slip through tier-1, and
-# run it (plus the telemetry suite) with the worker pool pinned to 4 via
-# the environment so the WISKI_THREADS parsing path is exercised for real —
-# the blocked compute layer must be bitwise identical at any thread count.
-WISKI_THREADS=4 cargo test -q --test structured --test telemetry
+# drift between the structured default path and the dense oracle, and the
+# osvgp_grad suite is the guard against drift in the analytic theta
+# gradients (O-SVGP step and WISKI noise) versus central differences; run
+# them by name so a filtered or skipped test file cannot slip through
+# tier-1, and run them (plus the telemetry suite) with the worker pool
+# pinned to 4 via the environment so the WISKI_THREADS parsing path is
+# exercised for real — the blocked compute layer must be bitwise identical
+# at any thread count.
+WISKI_THREADS=4 cargo test -q --test structured --test telemetry --test osvgp_grad
 
 echo "== cargo bench -- --list =="
 bench_list=$(cargo bench -- --list)
 printf '%s\n' "$bench_list"
-for bench_name in wiski_kuu perf gemm; do
+for bench_name in wiski_kuu perf gemm osvgp; do
     if ! printf '%s\n' "$bench_list" | grep -q "$bench_name"; then
         echo "ci.sh: bench section '$bench_name' missing from --list output" >&2
         exit 1

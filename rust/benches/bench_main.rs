@@ -40,6 +40,7 @@ const SECTIONS: &[(&str, &str, BenchFn)] = &[
     ("perf", "microbenchmarks: per-op latencies across (m, r)", perf),
     ("gemm", "blocked vs naive GEMM at the QSystem hot shapes, threads 1/2/4", gemm),
     ("wiski_kuu", "dense vs structured K_UU: QSystem build + predict, g in {16,32,64}, d=2", wiski_kuu),
+    ("osvgp", "analytic vs finite-difference theta gradients: O-SVGP step latency, m in {64,256}", osvgp),
 ];
 
 fn main() {
@@ -849,6 +850,119 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
         Err(e) => println!("(could not write {path}: {e})"),
     }
     println!("(structured path never materializes the m x m K_UU; dense is the oracle)");
+}
+
+// ------------------------------------------------------------------- osvgp --
+
+/// Analytic vs finite-difference theta gradients in the native O-SVGP step
+/// (rbf, d=2, q=1) at m ∈ {64, 256}.  The analytic step is timed directly
+/// and its gradient share read from the `osvgp.grad` span histogram delta;
+/// the FD-equivalent step is reconstructed as step − grad + fd, where fd
+/// times the 2·theta_dim `theta_part_loss_f64` evaluations the deleted
+/// finite-difference loop paid per step.  Rows + the telemetry registry go
+/// to BENCH_osvgp.json at the repo root.
+fn osvgp(_rt: &Arc<dyn Executor>) {
+    use wiski::backend::native::theta_part_loss_f64;
+    use wiski::kernels::inv_softplus;
+    use wiski::runtime::Tensor;
+    use wiski::telemetry;
+
+    fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    }
+
+    let (kind, d, q) = ("rbf", 2usize, 1usize);
+    let kernel = Kernel::from_kind(kind, d);
+    let td = kernel.theta_dim();
+    let mut rows_json = Vec::new();
+    println!("    m    step_ms    grad_ms      fd_ms   fd_equiv_ms   speedup");
+    for m in [64usize, 256] {
+        let mut be = NativeBackend::empty();
+        be.add_osvgp_family(kind, d, m, q, 256);
+        let step_name = format!("osvgp_step_{kind}_d{d}_m{m}_q{q}");
+        let mut rng = wiski::rng::Rng::new(29);
+        let mut q_raw = vec![0f32; m * m];
+        for i in 0..m {
+            for j in 0..i {
+                q_raw[i * m + j] = rng.range(-0.2, 0.2) as f32;
+            }
+            q_raw[i * m + i] = inv_softplus(1.0) as f32;
+        }
+        let mut old_l = vec![0f32; m * m];
+        for i in 0..m {
+            old_l[i * m + i] = 1.0;
+        }
+        let ins: Vec<Tensor> = vec![
+            Tensor::vec1((0..m).map(|_| (0.3 * rng.normal()) as f32).collect()),
+            Tensor::new(vec![m, m], q_raw),
+            Tensor::vec1(kernel.default_theta(0.2).iter().map(|&v| v as f32).collect()),
+            Tensor::new(vec![m, d], (0..m * d).map(|_| rng.range(-1.0, 1.0) as f32).collect()),
+            Tensor::vec1(kernel.default_theta(0.3).iter().map(|&v| v as f32).collect()),
+            Tensor::vec1((0..m).map(|_| (0.1 * rng.normal()) as f32).collect()),
+            Tensor::new(vec![m, m], old_l),
+            Tensor::new(vec![q, d], (0..q * d).map(|_| rng.range(-1.0, 1.0) as f32).collect()),
+            Tensor::vec1((0..q).map(|_| rng.normal() as f32).collect()),
+            Tensor::vec1(vec![1.0; q]),
+            Tensor::scalar(1e-3),
+        ];
+        be.exec(&step_name, &ins).unwrap(); // warmup
+        let grad_hist = telemetry::histogram("osvgp.grad");
+        let before = grad_hist.snapshot();
+        let reps = if m >= 256 { 4usize } else { 8 };
+        let step_ms = time_ms(reps, || {
+            be.exec(&step_name, &ins).unwrap();
+        });
+        let after = grad_hist.snapshot();
+        let grad_ms = (after.mean_us() * after.count() as f64
+            - before.mean_us() * before.count() as f64)
+            / reps as f64
+            / 1e3;
+        // the deleted FD loop paid 2·theta_dim objective evaluations per step
+        let eps = 5e-4f32;
+        let fd_ms = time_ms(reps, || {
+            for j in 0..td {
+                let mut plus = ins.clone();
+                let mut minus = ins.clone();
+                plus[2].data[j] += eps;
+                minus[2].data[j] -= eps;
+                std::hint::black_box(
+                    theta_part_loss_f64(kind, m, d, q, &plus)
+                        - theta_part_loss_f64(kind, m, d, q, &minus),
+                );
+            }
+        });
+        let fd_equiv_ms = step_ms - grad_ms + fd_ms;
+        let speedup = fd_equiv_ms / step_ms;
+        println!(
+            "{m:>5} {step_ms:>10.2} {grad_ms:>10.2} {fd_ms:>10.2} {fd_equiv_ms:>13.2} {speedup:>8.1}x"
+        );
+        rows_json.push(format!(
+            "    {{\"m\": {m}, \"d\": {d}, \"q\": {q}, \"theta_dim\": {td}, \
+             \"step_analytic_ms\": {step_ms:.3}, \"grad_ms\": {grad_ms:.3}, \
+             \"fd_baseline_ms\": {fd_ms:.3}, \"step_fd_equiv_ms\": {fd_equiv_ms:.3}, \
+             \"speedup\": {speedup:.2}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"osvgp\",\n  \"kind\": \"rbf\",\n  \"unit\": \"ms\",\n  \
+         \"note\": \"step_analytic = native osvgp_step with analytic theta gradient; grad_ms = \
+         osvgp.grad span share of the step; fd_baseline = 2*theta_dim theta_part_loss_f64 \
+         evaluations (the deleted finite-difference loop's per-step cost); step_fd_equiv = \
+         step - grad + fd; produced by `cargo bench -- osvgp`\",\n  \"rows\": [\n{}\n  ],\n  \
+         \"telemetry\": {}\n}}\n",
+        rows_json.join(",\n"),
+        telemetry::snapshot().to_json()
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_osvgp.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+    println!("(the analytic gradient replaces 2*theta_dim objective re-evaluations per step)");
 }
 
 // -------------------------------------------------------------------- perf --

@@ -17,8 +17,10 @@
 //!   structured contractions, and an executor-level Q-system cache (see
 //!   [`wiski`] module docs for the algebra).
 //! - `osvgp_step_*` / `osvgp_predict_*` / `osvgp_qfactor_*`: the streaming
-//!   variational baseline's generalized ELBO, with analytic (q_mu, q_raw)
-//!   gradients and finite-difference theta gradients.
+//!   variational baseline's generalized ELBO, with fully analytic
+//!   (q_mu, q_raw, theta) gradients — the theta gradient contracts
+//!   dK/dtheta against the forward pass's own Cholesky intermediates (see
+//!   [`osvgp`] module docs for the identities).
 //!
 //! The default registry mirrors `aot.py:build_registry` one-for-one, plus
 //! a few native-only variants that AOT compile times made impractical
@@ -27,6 +29,9 @@
 
 mod osvgp;
 mod wiski;
+
+pub use osvgp::{step_loss_f64, theta_part_loss_f64};
+pub use wiski::mll_value_f64;
 
 use anyhow::{bail, Result};
 

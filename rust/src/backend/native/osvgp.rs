@@ -9,22 +9,38 @@
 //!
 //! Gradients w.r.t. q_mu and L are analytic (standard Gaussian-KL and
 //! expected-log-likelihood derivatives; the diagonal chains through the
-//! softplus), then mapped to q_raw.  The theta gradient is a central finite
-//! difference of the theta-dependent part (data term + beta KL(q||p_theta);
-//! the old-posterior KLs are constants in theta), matching jax autodiff to
-//! FD accuracy — acceptable because theta moves by Adam on a noisy
-//! streaming objective anyway.
+//! softplus), then mapped to q_raw.
+//!
+//! The theta gradient is analytic too (only data + beta KL(q||p_theta)
+//! depend on theta; the old-posterior KLs are constants).  Writing
+//! K = Kzz + 2 jitter I, a_i = K^-1 kzx_i, u = K^-1 q_mu,
+//! b_i = K^-1 L L^T a_i, every theta-dependent quantity is a contraction
+//! of dK/dtheta against intermediates the forward pass already produced:
+//!
+//!   dmean_i = u^T dkzx_i - u^T dKzz a_i
+//!   dvar_i  = dkxx_i + 2 (b_i - a_i)^T dkzx_i + a_i^T dKzz a_i
+//!             - 2 b_i^T dKzz a_i
+//!   dKL     = 1/2 <K^-1 - (K^-1 L)(K^-1 L)^T - u u^T, dKzz>
+//!
+//! so one m x m coefficient matrix collects every dKzz term (a single
+//! `eval_with_grad` pair loop over the inducing points), per-point weight
+//! vectors collect the dkzx terms, and `diag_with_grad` handles kxx.  The
+//! noise enters only the Gaussian likelihood; its derivative is closed
+//! form through the softplus chain.  `theta_part_loss_f64` /
+//! `step_loss_f64` re-expose the f64 objective for gradchecks and for the
+//! bench's FD-baseline costing (the pre-analytic implementation evaluated
+//! the theta part 2·td times per step as a central difference).
 
 use anyhow::Result;
 
 use crate::kernels::{sigmoid, softplus, Kernel};
 use crate::linalg::{axpy, dot, Cholesky, Mat};
 use crate::runtime::{ArtifactSpec, Tensor};
+use crate::telemetry;
 
 const LOG_2PI: f64 = 1.8378770664093453;
 /// Mirrors osvgp.py KZZ_JITTER.
 const KZZ_JITTER: f64 = 1e-4;
-const THETA_FD_EPS: f64 = 1e-5;
 
 /// L = tril(q_raw, -1) + diag(softplus(diag(q_raw)) + 1e-6).
 fn q_factor(q_raw: &Mat) -> Mat {
@@ -129,6 +145,7 @@ struct ThetaPart {
     kl_new: f64,
     s2: f64,
     mean: Vec<f64>,
+    var: Vec<f64>,
     a_cols: Mat,
     chk: Cholesky,
     kinv_l: Mat,
@@ -154,7 +171,133 @@ fn theta_part(
         data -= mask[i] * ell;
     }
     let (kl_new, kinv_l) = kl_vs_chol(q_mu, l_q, &chk);
-    ThetaPart { data, kl_new, s2, mean, a_cols, chk, kinv_l }
+    ThetaPart { data, kl_new, s2, mean, var, a_cols, chk, kinv_l }
+}
+
+/// Analytic d(loss)/d(theta_raw) of the theta-dependent part —
+/// data + beta * KL(q || p_theta).  See the module doc for the identities;
+/// everything reduces to (1) one m x m coefficient matrix contracted
+/// against dKzz/dtheta via a single `eval_with_grad` pair sweep over the
+/// inducing points, (2) per-point weight vectors against dKzx, (3)
+/// `diag_with_grad` for the kxx diag, and (4) the closed-form noise
+/// derivative through the softplus chain.
+#[allow(clippy::too_many_arguments)]
+fn theta_grad(
+    kernel: &Kernel,
+    theta: &[f64],
+    l_q: &Mat,
+    z: &[Vec<f64>],
+    x: &[Vec<f64>],
+    y: &[f64],
+    mask: &[f64],
+    beta: f64,
+    base: &ThetaPart,
+    kinv_mu: &[f64],
+) -> Vec<f64> {
+    let _span = telemetry::span("osvgp.grad");
+    let td = kernel.theta_dim();
+    let m = z.len();
+    let b = x.len();
+    let s2 = base.s2;
+    let mut grad = vec![0.0; td];
+
+    // Per-point loss weights dF/dmean_i and dF/dvar_i.  A point whose
+    // variance hit the 1e-10 floor has zero var-sensitivity (clipped).
+    let mut g_mean = vec![0.0; b];
+    let mut g_var = vec![0.0; b];
+    for i in 0..b {
+        g_mean[i] = -mask[i] * (y[i] - base.mean[i]) / s2;
+        g_var[i] = if base.var[i] > 1e-10 { mask[i] * 0.5 / s2 } else { 0.0 };
+    }
+
+    // b_cols = K^{-1} L L^T a_cols (m x b): the svar chain.
+    let sa_all = l_q.transpose().matmul(&base.a_cols);
+    let b_cols = base.kinv_l.matmul(&sa_all);
+
+    // ---- dKzz coefficient matrix -------------------------------------
+    // cmat[(p, r)] collects every dF/dKzz_pr: the data terms are rank-1
+    // updates v_i a_i^T with v_i = -g_mean_i u + g_var_i (a_i - 2 b_i),
+    // the KL term is beta/2 (K^{-1} - (K^{-1}L)(K^{-1}L)^T - u u^T).
+    let mut cmat = Mat::zeros(m, m);
+    let mut a_i = vec![0.0; m];
+    let mut v_i = vec![0.0; m];
+    for i in 0..b {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        for p in 0..m {
+            a_i[p] = base.a_cols[(p, i)];
+            v_i[p] =
+                -g_mean[i] * kinv_mu[p] + g_var[i] * (a_i[p] - 2.0 * b_cols[(p, i)]);
+        }
+        for p in 0..m {
+            if v_i[p] != 0.0 {
+                axpy(v_i[p], &a_i, cmat.row_mut(p));
+            }
+        }
+    }
+    let kinv = base.chk.solve_cols(&Mat::eye(m));
+    let ll = base.kinv_l.matmul(&base.kinv_l.transpose());
+    for p in 0..m {
+        for r in 0..m {
+            cmat[(p, r)] +=
+                0.5 * beta * (kinv[(p, r)] - ll[(p, r)] - kinv_mu[p] * kinv_mu[r]);
+        }
+    }
+
+    // One eval_with_grad sweep over inducing pairs; dKzz is symmetric so
+    // off-diagonal weights fold both coefficient entries.  The last grad
+    // slot (noise) is structurally zero in eval_with_grad and handled in
+    // closed form below, so the accumulation stops at td - 1.
+    let mut dk = vec![0.0; td];
+    for p in 0..m {
+        for r in p..m {
+            let w = if p == r { cmat[(p, p)] } else { cmat[(p, r)] + cmat[(r, p)] };
+            if w == 0.0 {
+                continue;
+            }
+            kernel.eval_with_grad(theta, &z[p], &z[r], &mut dk);
+            for j in 0..td - 1 {
+                grad[j] += w * dk[j];
+            }
+        }
+    }
+
+    // ---- dKzx and dkxx terms -----------------------------------------
+    for i in 0..b {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        for p in 0..m {
+            let wp = g_mean[i] * kinv_mu[p]
+                + 2.0 * g_var[i] * (b_cols[(p, i)] - base.a_cols[(p, i)]);
+            if wp == 0.0 {
+                continue;
+            }
+            kernel.eval_with_grad(theta, &z[p], &x[i], &mut dk);
+            for j in 0..td - 1 {
+                grad[j] += wp * dk[j];
+            }
+        }
+        if g_var[i] != 0.0 {
+            kernel.diag_with_grad(theta, &x[i], &mut dk);
+            for j in 0..td - 1 {
+                grad[j] += g_var[i] * dk[j];
+            }
+        }
+    }
+
+    // ---- noise: closed form through the softplus chain ---------------
+    // d data / d s2 = sum_i mask_i (1/(2 s2) - ((y-mean)^2 + var)/(2 s2^2));
+    // KL(q || p_theta) has no s2 dependence.
+    let mut dds2 = 0.0;
+    for i in 0..b {
+        let sq = (y[i] - base.mean[i]) * (y[i] - base.mean[i]) + base.var[i];
+        dds2 += mask[i] * (0.5 / s2 - 0.5 * sq / (s2 * s2));
+    }
+    grad[td - 1] = dds2 * sigmoid(theta[td - 1]);
+
+    grad
 }
 
 fn rows_of(t: &Tensor, n: usize, d: usize) -> Vec<Vec<f64>> {
@@ -178,29 +321,92 @@ fn to_f32_tensor(mat: &Mat) -> Tensor {
     )
 }
 
+/// The eleven `osvgp_step_*` input tensors lifted to f64, shared by the
+/// executor path and the `*_loss_f64` gradcheck/bench entry points.
+struct StepInputs {
+    kernel: Kernel,
+    q_mu: Vec<f64>,
+    q_raw: Mat,
+    theta: Vec<f64>,
+    z: Vec<Vec<f64>>,
+    theta_old: Vec<f64>,
+    old_mu: Vec<f64>,
+    old_l: Mat,
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    mask: Vec<f64>,
+    beta: f64,
+}
+
+fn unpack_step(kind: &str, m: usize, d: usize, q: usize, inputs: &[Tensor]) -> StepInputs {
+    StepInputs {
+        kernel: Kernel::from_kind(kind, d),
+        q_mu: f64v(&inputs[0]),
+        q_raw: mat_of(&inputs[1], m, m),
+        theta: f64v(&inputs[2]),
+        z: rows_of(&inputs[3], m, d),
+        theta_old: f64v(&inputs[4]),
+        old_mu: f64v(&inputs[5]),
+        old_l: mat_of(&inputs[6], m, m),
+        x: rows_of(&inputs[7], q, d),
+        y: f64v(&inputs[8]),
+        mask: f64v(&inputs[9]),
+        beta: inputs[10].item() as f64,
+    }
+}
+
+/// f64 value of the full step objective — data + beta (KL(q||p_theta) +
+/// KL(q||q_old) - KL(q||p_theta_old)) — exactly what `step` returns as its
+/// (f32) loss output.  Public so gradchecks can central-difference the
+/// objective without f32 round-off swamping the quotient.
+pub fn step_loss_f64(kind: &str, m: usize, d: usize, q: usize, inputs: &[Tensor]) -> f64 {
+    let si = unpack_step(kind, m, d, q, inputs);
+    let l_q = q_factor(&si.q_raw);
+    let base =
+        theta_part(&si.kernel, &si.theta, &si.q_mu, &l_q, &si.z, &si.x, &si.y, &si.mask);
+    let old_ch = Cholesky { l: si.old_l };
+    let (kl_old_q, _) = kl_vs_gaussian(&si.q_mu, &l_q, &si.old_mu, &old_ch);
+    let chk_old = kzz_chol(&si.kernel, &si.theta_old, &si.z);
+    let (kl_old_p, _) = kl_vs_chol(&si.q_mu, &l_q, &chk_old);
+    base.data + si.beta * (base.kl_new + kl_old_q - kl_old_p)
+}
+
+/// f64 value of just the theta-dependent part — data + beta KL(q||p_theta).
+/// This is the objective the deleted FD loop evaluated 2·td times per step;
+/// kept public so the bench can cost that baseline honestly.
+pub fn theta_part_loss_f64(kind: &str, m: usize, d: usize, q: usize, inputs: &[Tensor]) -> f64 {
+    let si = unpack_step(kind, m, d, q, inputs);
+    let l_q = q_factor(&si.q_raw);
+    let base =
+        theta_part(&si.kernel, &si.theta, &si.q_mu, &l_q, &si.z, &si.x, &si.y, &si.mask);
+    base.data + si.beta * base.kl_new
+}
+
 /// `osvgp_step_*`: loss + gradients w.r.t. (q_mu, q_raw, theta).
 pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let _span = telemetry::span("osvgp.step");
     let kind = spec.meta.get("kind").map(String::as_str).unwrap_or("rbf");
     let m = spec.meta_usize("m")?;
     let d = spec.meta_usize("d")?;
     let q = spec.meta_usize("q")?;
-    let kernel = Kernel::from_kind(kind, d);
-    let td = kernel.theta_dim();
-
-    let q_mu = f64v(&inputs[0]);
-    let q_raw = mat_of(&inputs[1], m, m);
-    let theta = f64v(&inputs[2]);
-    let z = rows_of(&inputs[3], m, d);
-    let theta_old = f64v(&inputs[4]);
-    let old_mu = f64v(&inputs[5]);
-    let old_l = mat_of(&inputs[6], m, m);
-    let x = rows_of(&inputs[7], q, d);
-    let y = f64v(&inputs[8]);
-    let mask = f64v(&inputs[9]);
-    let beta = inputs[10].item() as f64;
+    let StepInputs {
+        kernel,
+        q_mu,
+        q_raw,
+        theta,
+        z,
+        theta_old,
+        old_mu,
+        old_l,
+        x,
+        y,
+        mask,
+        beta,
+    } = unpack_step(kind, m, d, q, inputs);
 
     let l_q = q_factor(&q_raw);
     let base = theta_part(&kernel, &theta, &q_mu, &l_q, &z, &x, &y, &mask);
+    let kinv_mu = base.chk.solve(&q_mu);
     let old_ch = Cholesky { l: old_l };
     let (kl_old_q, olds_inv_l) = kl_vs_gaussian(&q_mu, &l_q, &old_mu, &old_ch);
     let chk_old = kzz_chol(&kernel, &theta_old, &z);
@@ -219,7 +425,7 @@ pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>
             axpy(vd, &a_i, &mut g_mu);
         }
     }
-    axpy(beta, &base.chk.solve(&q_mu), &mut g_mu);
+    axpy(beta, &kinv_mu, &mut g_mu);
     let dm: Vec<f64> = q_mu.iter().zip(&old_mu).map(|(a, b)| a - b).collect();
     axpy(beta, &old_ch.solve(&dm), &mut g_mu);
     axpy(-beta, &chk_old.solve(&q_mu), &mut g_mu);
@@ -260,19 +466,8 @@ pub(super) fn step(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>
         }
     });
 
-    // ---- g_theta: central FD over the theta-dependent part -----------
-    let mut g_theta = vec![0.0; td];
-    for (j, gt) in g_theta.iter_mut().enumerate() {
-        let mut tp = theta.clone();
-        let mut tm = theta.clone();
-        tp[j] += THETA_FD_EPS;
-        tm[j] -= THETA_FD_EPS;
-        let pp = theta_part(&kernel, &tp, &q_mu, &l_q, &z, &x, &y, &mask);
-        let pm = theta_part(&kernel, &tm, &q_mu, &l_q, &z, &x, &y, &mask);
-        let lp = pp.data + beta * pp.kl_new;
-        let lm = pm.data + beta * pm.kl_new;
-        *gt = (lp - lm) / (2.0 * THETA_FD_EPS);
-    }
+    // ---- g_theta: analytic contraction against the ThetaPart ---------
+    let g_theta = theta_grad(&kernel, &theta, &l_q, &z, &x, &y, &mask, beta, &base, &kinv_mu);
 
     Ok(vec![
         Tensor::scalar(loss as f32),

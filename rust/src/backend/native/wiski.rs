@@ -39,9 +39,11 @@
 //! Z = S L_Q^{-T} the trace becomes Σ_l z_l^T (dK/dθ_j) z_l — per-dimension
 //! structured contractions, O(k·m·g log g) per parameter instead of the
 //! m²/2 `eval_with_grad` pair loop (which remains the dense-oracle path).
-//! The noise parameter enters only through the scalar s2, so its gradient
-//! is a central finite difference over a cheap O(k^3) re-evaluation that
-//! reuses every K-dependent intermediate.
+//! The noise parameter enters only through the scalar s2, where the MLL is
+//! an explicit function (`mll_at_s2`), so d mll/d raw is exact and free:
+//! with Qj = Q + eps_Q I, b0 = Qj^{-1} a0 and phi = a0^T b0, the s2
+//! derivatives of the quadratic form, the logdet (via tr(Qj^{-1} g0)), and
+//! the n log s2 term combine in closed form and chain through the softplus.
 //!
 //! **QSystem cache.**  Building the Q-system is the dominant per-call cost
 //! and is a pure function of (theta, caches).  The executor keeps the last
@@ -56,7 +58,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::Result;
 
 use crate::gp::ski::Lattice;
-use crate::kernels::{softplus, Kernel};
+use crate::kernels::{sigmoid, Kernel};
 use crate::linalg::{axpy, dot, Cholesky, KroneckerToeplitz, KuuOp, Mat};
 use crate::runtime::{ArtifactSpec, Tensor};
 use crate::telemetry;
@@ -67,8 +69,6 @@ const Q_JITTER: f64 = 1e-4;
 const C_JITTER: f64 = 1e-4;
 /// Basis-growth tolerance, model.py:_basis_update.
 const GROW_TOL: f64 = 1e-4;
-/// Central-difference step (on the raw noise parameter).
-const NOISE_FD_EPS: f64 = 1e-5;
 
 /// f64 view of the six caches (wty, yty, n, U, C, krank).
 struct Caches {
@@ -192,9 +192,9 @@ struct QSystem {
     cholq: Cholesky,
     k_wty: Vec<f64>,
     b_vec: Vec<f64>,
-    /// Ch^T (U^T K U) Ch — Q = I + g0/s2 (reused by the noise FD).
+    /// Ch^T (U^T K U) Ch — Q = I + g0/s2 (reused by the noise gradient).
     g0: Mat,
-    /// Ch^T U^T K wty — a = a0/s2 (reused by the noise FD).
+    /// Ch^T U^T K wty — a = a0/s2 (reused by the noise gradient).
     a0: Vec<f64>,
     wty_k_wty: f64,
     /// K·S (m x ke), memoized on the first predict — step/mll never need
@@ -347,13 +347,28 @@ impl QSystem {
                 }
             }
         }
-        // noise: central difference on the raw parameter through s2 only
-        let raw = theta[td - 1];
-        let s2p = softplus(raw + NOISE_FD_EPS) + 1e-6;
-        let s2m = softplus(raw - NOISE_FD_EPS) + 1e-6;
-        grad[td - 1] = (self.mll_at_s2(s2p, caches.yty, caches.n)
-            - self.mll_at_s2(s2m, caches.yty, caches.n))
-            / (2.0 * NOISE_FD_EPS);
+        // noise: exact d mll / d raw through s2.  `mll_at_s2` is explicit in
+        // s2, so with Qj = Q + eps_Q I (cholq), b0 = Qj^{-1} a0 = s2 * b_vec,
+        // phi = a0^T b0, and ymy = wkw/s2 - phi/s2^2:
+        //   d ymy / d s2    = -wkw/s2^2 - (b0^T g0 b0)/s2^4 + 2 phi/s2^3
+        //   d logdet / d s2 = tr(Qj^{-1} dQj) = -tr(Qj^{-1} g0)/s2^2
+        //   d mll / d s2    = (yty - ymy)/(2 s2^2) + ymy'/(2 s2)
+        //                     + tr(Qj^{-1} g0)/(2 s2^2) - n/(2 s2)
+        // chained through d s2/d raw = sigmoid(raw).
+        let s2 = self.s2;
+        let b0: Vec<f64> = self.b_vec.iter().map(|v| v * s2).collect();
+        let phi = dot(&self.a0, &b0);
+        let quad = dot(&b0, &self.g0.matvec(&b0));
+        let qinv_g0 = self.cholq.solve_cols(&self.g0);
+        let tr_qg: f64 = (0..self.ke).map(|i| qinv_g0[(i, i)]).sum();
+        let ymy = self.wty_k_wty / s2 - phi / (s2 * s2);
+        let dymy = -self.wty_k_wty / (s2 * s2) - quad / (s2 * s2 * s2 * s2)
+            + 2.0 * phi / (s2 * s2 * s2);
+        let dmll_ds2 = (caches.yty - ymy) / (2.0 * s2 * s2)
+            + dymy / (2.0 * s2)
+            + tr_qg / (2.0 * s2 * s2)
+            - caches.n / (2.0 * s2);
+        grad[td - 1] = dmll_ds2 * sigmoid(theta[td - 1]);
         (val, grad)
     }
 }
@@ -528,6 +543,20 @@ pub(super) fn step(
     Ok(out)
 }
 
+/// f64 MLL at the given (theta + 6 caches) tensors — exactly the value the
+/// `wiski_mll_*` artifact returns, without the f32 output rounding.  Public
+/// so the noise-gradient gradcheck can central-difference the objective at
+/// full precision.
+pub fn mll_value_f64(kind: &str, d: usize, g: usize, r: usize, inputs: &[Tensor]) -> f64 {
+    let kernel = Kernel::from_kind(kind, d);
+    let lattice = Lattice::new(g, d);
+    let m = lattice.m();
+    let theta = theta_f64(&inputs[0]);
+    let caches = Caches::unpack(&inputs[1..7], m, r);
+    let sys = QSystem::build(&kernel, &theta, &lattice, &caches, false);
+    sys.mll_at_s2(sys.s2, caches.yty, caches.n)
+}
+
 /// `wiski_mll_*`: MLL + grad on the current caches (refit channel).
 pub(super) fn mll(
     spec: &ArtifactSpec,
@@ -615,6 +644,7 @@ pub(super) fn predict(
 mod tests {
     use super::*;
     use crate::backend::{Executor, NativeBackend};
+    use crate::kernels::softplus;
     use crate::rng::Rng;
 
     fn small_backend() -> NativeBackend {

@@ -1,5 +1,6 @@
 //! Threaded model server: request router + observation micro-batcher.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -49,7 +50,11 @@ pub struct ServerStats {
     pub predict_latency: HistSnapshot,
     /// Observations per successful micro-batch (count == observe_batches).
     pub batch_sizes: RunningStats,
-    /// High-water mark of the coalesced observe queue.
+    /// High-water mark of the pending observation backlog: the most
+    /// drained-but-not-yet-applied observations seen at any drain point.
+    /// Micro-batches are capped at `batch_q`, so under load the backlog
+    /// (and this mark) exceeds every batch size — the two are distinct
+    /// measurements.
     pub max_queue_depth: u64,
     /// Observe batches whose `observe_batch` failed.  Observations are
     /// fire-and-forget (no reply channel), so without this counter a
@@ -167,34 +172,63 @@ impl ModelServer {
         let stats = Arc::new(Mutex::new(ServerStats::default()));
         let stats_worker = stats.clone();
         let join = std::thread::spawn(move || {
-            let mut pending_x: Vec<Vec<f64>> = Vec::new();
-            let mut pending_y: Vec<f64> = Vec::new();
-            // Applies the queued micro-batch.  Failures are *recorded*, not
-            // just printed: observes carry no reply channel, so the error
-            // counter (asserted on by callers after `flush`) is the only
-            // signal that data was dropped.
-            let flush_pending = |model: &mut M,
-                                 pending_x: &mut Vec<Vec<f64>>,
-                                 pending_y: &mut Vec<f64>| {
-                if pending_x.is_empty() {
+            let mut backlog: VecDeque<(Vec<f64>, f64)> = VecDeque::new();
+            // Pull every already-queued request into the backlog without
+            // blocking.  The first non-observe stops the drain (it must be
+            // handled after the observes that preceded it, and observes
+            // that arrive later must not jump ahead of it).
+            let drain = |backlog: &mut VecDeque<(Vec<f64>, f64)>,
+                         deferred: &mut Option<Request>| {
+                while deferred.is_none() {
+                    match rx.try_recv() {
+                        Ok(Request::Observe { x, y }) => backlog.push_back((x, y)),
+                        Ok(other) => *deferred = Some(other),
+                        Err(_) => break,
+                    }
+                }
+            };
+            // The queue-depth gauge and high-water mark measure the true
+            // pending backlog — everything drained but not yet applied —
+            // not the size of the next micro-batch.
+            let record_depth = |backlog: &VecDeque<(Vec<f64>, f64)>| {
+                let depth = backlog.len() as u64;
+                if depth == 0 {
                     return;
                 }
-                let depth = pending_x.len() as u64;
                 telemetry::gauge("server.queue_depth").set(depth);
-                telemetry::gauge("server.batch_size").set(depth);
+                let mut st = stats_worker.lock().unwrap();
+                st.max_queue_depth = st.max_queue_depth.max(depth);
+            };
+            // Applies one micro-batch (at most `batch_q` observations off
+            // the front of the backlog).  Failures are *recorded*, not just
+            // printed: observes carry no reply channel, so the error
+            // counter (asserted on by callers after `flush`) is the only
+            // signal that data was dropped.
+            let flush_chunk = |model: &mut M, backlog: &mut VecDeque<(Vec<f64>, f64)>| {
+                let take = backlog.len().min(batch_q);
+                if take == 0 {
+                    return;
+                }
+                let mut xs = Vec::with_capacity(take);
+                let mut ys = Vec::with_capacity(take);
+                for _ in 0..take {
+                    let (x, y) = backlog.pop_front().expect("take <= backlog.len()");
+                    xs.push(x);
+                    ys.push(y);
+                }
+                telemetry::gauge("server.batch_size").set(take as u64);
                 let span = telemetry::span("server.observe_batch");
                 let t0 = Instant::now();
-                let result = model.observe_batch(pending_x, pending_y);
+                let result = model.observe_batch(&xs, &ys);
                 let dt_us = t0.elapsed().as_micros() as u64;
                 drop(span);
                 let mut st = stats_worker.lock().unwrap();
-                st.max_queue_depth = st.max_queue_depth.max(depth);
                 match result {
                     Ok(()) => {
-                        st.observed += pending_x.len() as u64;
+                        st.observed += take as u64;
                         st.observe_batches += 1;
                         st.observe_latency.record_us(dt_us);
-                        st.batch_sizes.push(pending_x.len() as f64);
+                        st.batch_sizes.push(take as f64);
                     }
                     Err(e) => {
                         st.observe_errors += 1;
@@ -203,43 +237,28 @@ impl ModelServer {
                         eprintln!("observe error: {e:#}");
                     }
                 }
-                pending_x.clear();
-                pending_y.clear();
             };
             while let Ok(req) = rx.recv() {
+                let mut deferred: Option<Request> = None;
                 match req {
-                    Request::Observe { x, y } => {
-                        pending_x.push(x);
-                        pending_y.push(y);
-                        // coalesce: drain whatever else is already queued
-                        while pending_x.len() < batch_q {
-                            match rx.try_recv() {
-                                Ok(Request::Observe { x, y }) => {
-                                    pending_x.push(x);
-                                    pending_y.push(y);
-                                }
-                                Ok(other) => {
-                                    // non-observe: flush, then handle it
-                                    flush_pending(&mut model, &mut pending_x, &mut pending_y);
-                                    if !Self::handle_other(
-                                        &mut model,
-                                        other,
-                                        &stats_worker,
-                                    ) {
-                                        return;
-                                    }
-                                    break;
-                                }
-                                Err(_) => break,
-                            }
-                        }
-                        flush_pending(&mut model, &mut pending_x, &mut pending_y);
+                    Request::Observe { x, y } => backlog.push_back((x, y)),
+                    other => deferred = Some(other),
+                }
+                drain(&mut backlog, &mut deferred);
+                record_depth(&backlog);
+                while !backlog.is_empty() {
+                    flush_chunk(&mut model, &mut backlog);
+                    // keep measuring arrivals while batches apply — unless
+                    // a non-observe is pending, which gates further drains
+                    // so request ordering is preserved
+                    if deferred.is_none() {
+                        drain(&mut backlog, &mut deferred);
+                        record_depth(&backlog);
                     }
-                    other => {
-                        flush_pending(&mut model, &mut pending_x, &mut pending_y);
-                        if !Self::handle_other(&mut model, other, &stats_worker) {
-                            return;
-                        }
+                }
+                if let Some(other) = deferred {
+                    if !Self::handle_other(&mut model, other, &stats_worker) {
+                        return;
                     }
                 }
             }
@@ -402,6 +421,57 @@ mod tests {
         // the router survives and still answers predictions
         let preds = h.predict(vec![vec![0.0]]).unwrap();
         assert_eq!(preds.len(), 1);
+        server.shutdown();
+    }
+
+    /// A model slow enough that observations pile up behind the in-flight
+    /// batch.  Queue depth must measure the true backlog (which exceeds
+    /// the `batch_q` micro-batch ceiling under load), while batch sizes
+    /// stay capped at `batch_q` — the two are different numbers.
+    struct SlowModel {
+        observed: usize,
+    }
+
+    impl OnlineGp for SlowModel {
+        fn name(&self) -> &str {
+            "slow"
+        }
+
+        fn num_observed(&self) -> usize {
+            self.observed
+        }
+
+        fn observe(&mut self, _x: &[f64], _y: f64) -> Result<()> {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            self.observed += 1;
+            Ok(())
+        }
+
+        fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+            Ok(vec![Prediction::default(); xs.len()])
+        }
+    }
+
+    #[test]
+    fn queue_depth_measures_backlog_not_batch_size() {
+        let server = ModelServer::spawn(SlowModel { observed: 0 }, 4);
+        let h = server.handle();
+        for i in 0..32 {
+            h.observe(vec![i as f64], 0.0).unwrap();
+        }
+        let stats = h.flush().unwrap();
+        assert_eq!(stats.observed, 32);
+        assert_eq!(stats.observe_errors, 0);
+        assert!(
+            stats.batch_sizes.max() <= 4.0,
+            "micro-batches must stay capped at batch_q, got {}",
+            stats.batch_sizes.max()
+        );
+        assert!(
+            stats.max_queue_depth > 4,
+            "backlog high-water mark ({}) must exceed the batch ceiling",
+            stats.max_queue_depth
+        );
         server.shutdown();
     }
 

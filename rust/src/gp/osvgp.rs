@@ -7,6 +7,12 @@
 //! (q_mu, q_raw), the inducing locations, the old-posterior snapshot, and
 //! Adam.  After each observation batch the old posterior is refreshed
 //! (old <- current), which is Bui et al.'s streaming recursion.
+//!
+//! All three gradients the step returns — q_mu, q_raw, *and* theta — are
+//! analytic on the native backend (the theta gradient contracts dK/dtheta
+//! against the step's own Cholesky intermediates; see
+//! `backend/native/osvgp.rs`), so every Adam step here consumes exact
+//! derivatives rather than finite-difference estimates.
 
 use std::sync::Arc;
 
@@ -240,5 +246,39 @@ impl OnlineGp for OSvgp {
             }
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn small_driver() -> OSvgp {
+        let mut be = NativeBackend::empty();
+        be.add_osvgp_family("rbf", 1, 8, 1, 4);
+        let rt: Arc<dyn Executor> = Arc::new(be);
+        OSvgp::new(rt, "rbf", 1, 8, 1e-3, 0.05, Projection::identity(1), 11).unwrap()
+    }
+
+    #[test]
+    fn observe_moves_theta_with_analytic_gradients() {
+        let mut gp = small_driver();
+        let theta0 = gp.theta.clone();
+        for i in 0..6 {
+            let x = -0.8 + 0.3 * i as f64;
+            gp.observe(&[x], (2.0f64 * x).sin()).unwrap();
+        }
+        assert_eq!(gp.num_observed(), 6);
+        assert!(gp.last_loss.is_finite(), "loss {}", gp.last_loss);
+        assert!(gp.theta.iter().all(|t| t.is_finite()));
+        // the theta gradient is live: Adam must have moved every raw
+        // parameter (lengthscale, outputscale, noise) off its init
+        for (j, (t, t0)) in gp.theta.iter().zip(&theta0).enumerate() {
+            assert!((t - t0).abs() > 1e-12, "theta[{j}] never moved from {t0}");
+        }
+        let p = gp.predict(&[vec![0.1]]).unwrap();
+        assert!(p[0].mean.is_finite());
+        assert!(p[0].var_y > p[0].var_f);
     }
 }

@@ -122,6 +122,32 @@ impl Kernel {
         self.eval(theta, x, x)
     }
 
+    /// k(x, x) together with its gradient w.r.t. every raw theta entry —
+    /// the zero-lag specialization of [`Kernel::eval_with_grad`].  At zero
+    /// lag only the amplitude parameters survive (the outputscale, the SM
+    /// mixture weights), so the per-point diag terms of the native theta
+    /// contraction skip the exp/cos machinery entirely.
+    pub fn diag_with_grad(&self, theta: &[f64], _x: &[f64], grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.theta_dim());
+        for g in grad.iter_mut() {
+            *g = 0.0;
+        }
+        match self {
+            Kernel::Rbf { dim } | Kernel::Matern12 { dim } => {
+                grad[*dim] = sigmoid(theta[*dim]);
+                softplus(theta[*dim]) + 1e-6
+            }
+            Kernel::SpectralMixture { q } => {
+                let mut kval = 0.0;
+                for i in 0..*q {
+                    kval += softplus(theta[i]) + 1e-8;
+                    grad[i] = sigmoid(theta[i]);
+                }
+                kval
+            }
+        }
+    }
+
     /// Input dimensionality (spectral mixture is 1-D here).
     pub fn input_dim(&self) -> usize {
         match self {
@@ -399,6 +425,32 @@ mod tests {
             }
             // the noise slot never enters k(a, b)
             assert_eq!(grad[kernel.theta_dim() - 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn diag_with_grad_matches_eval_with_grad_at_zero_lag() {
+        for kernel in [
+            Kernel::Rbf { dim: 2 },
+            Kernel::Matern12 { dim: 1 },
+            Kernel::SpectralMixture { q: 3 },
+        ] {
+            let theta = kernel.default_theta(0.2);
+            let td = kernel.theta_dim();
+            let x = vec![0.37; kernel.input_dim()];
+            let mut g_diag = vec![0.0; td];
+            let mut g_eval = vec![0.0; td];
+            let kd = kernel.diag_with_grad(&theta, &x, &mut g_diag);
+            let ke = kernel.eval_with_grad(&theta, &x, &x, &mut g_eval);
+            assert!((kd - ke).abs() < 1e-14, "{kernel:?}: diag {kd} vs eval {ke}");
+            for j in 0..td {
+                assert!(
+                    (g_diag[j] - g_eval[j]).abs() < 1e-14,
+                    "{kernel:?} param {j}: {} vs {}",
+                    g_diag[j],
+                    g_eval[j]
+                );
+            }
         }
     }
 

@@ -55,7 +55,10 @@ fn die(msg: &str) -> ! {
     std::process::exit(2);
 }
 
-fn parse_cli(args: &[String]) -> Cli {
+/// Strict parse: every token must be consumed.  Rejections come back as
+/// `Err(message)` (which `main` routes through [`die`]) so the error paths
+/// stay unit-testable without spawning a process.
+fn parse_cli(args: &[String]) -> Result<Cli, String> {
     let mut cli = Cli {
         cmd: String::new(),
         backend: None,
@@ -72,42 +75,46 @@ fn parse_cli(args: &[String]) -> Cli {
             }
             "--backend" => match it.next() {
                 Some(v) => cli.backend = Some(v.clone()),
-                None => die("--backend requires a value (native|pjrt)"),
+                None => return Err("--backend requires a value (native|pjrt)".into()),
             },
             "--artifacts" => match it.next() {
                 Some(v) => cli.artifacts = v.clone(),
-                None => die("--artifacts requires a directory"),
+                None => return Err("--artifacts requires a directory".into()),
             },
-            "--stream" => match it.next().and_then(|v| v.parse().ok()) {
-                Some(n) => cli.stream = Some(n),
-                None => die("--stream requires a positive integer"),
-            },
+            "--stream" => {
+                match it.next().and_then(|v| v.parse::<usize>().ok()).filter(|&n| n >= 1) {
+                    Some(n) => cli.stream = Some(n),
+                    None => return Err("--stream requires a positive integer".into()),
+                }
+            }
             "--threads" => {
                 match it.next().and_then(|v| v.parse::<usize>().ok()).filter(|&n| n >= 1) {
                     Some(n) => cli.threads = Some(n),
-                    None => die("--threads requires a positive integer"),
+                    None => return Err("--threads requires a positive integer".into()),
                 }
             }
-            flag if flag.starts_with('-') => die(&format!("unknown flag {flag:?}")),
+            flag if flag.starts_with('-') => return Err(format!("unknown flag {flag:?}")),
             cmd if cli.cmd.is_empty() => match cmd {
                 "info" | "serve" | "check" => cli.cmd = cmd.to_string(),
-                other => die(&format!("unknown command {other:?}; try: info | serve | check")),
+                other => {
+                    return Err(format!("unknown command {other:?}; try: info | serve | check"))
+                }
             },
-            extra => die(&format!("unexpected argument {extra:?}")),
+            extra => return Err(format!("unexpected argument {extra:?}")),
         }
     }
     if cli.cmd.is_empty() {
         cli.cmd = "info".into();
     }
     if cli.stream.is_some() && cli.cmd != "serve" {
-        die("--stream only applies to the serve command");
+        return Err("--stream only applies to the serve command".into());
     }
-    cli
+    Ok(cli)
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let cli = parse_cli(&args);
+    let cli = parse_cli(&args).unwrap_or_else(|msg| die(&msg));
     if let Some(n) = cli.threads {
         wiski::par::set_threads(n);
     }
@@ -256,5 +263,41 @@ fn probe_input(io: &wiski::runtime::IoSpec) -> Tensor {
         "mask" => Tensor::new(io.shape.clone(), vec![1.0; io.elem_count()]),
         "beta" => Tensor::scalar(1e-3),
         _ => Tensor::zeros(&io.shape),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_cli;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        std::iter::once("wiski")
+            .chain(args.iter().copied())
+            .map(String::from)
+            .collect()
+    }
+
+    #[test]
+    fn stream_rejects_zero_and_non_numeric() {
+        assert!(parse_cli(&argv(&["serve", "--stream", "0"])).is_err());
+        assert!(parse_cli(&argv(&["serve", "--stream", "many"])).is_err());
+        assert!(parse_cli(&argv(&["serve", "--stream"])).is_err());
+        let cli = parse_cli(&argv(&["serve", "--stream", "5"])).unwrap();
+        assert_eq!(cli.stream, Some(5));
+        assert_eq!(cli.cmd, "serve");
+    }
+
+    #[test]
+    fn threads_rejects_zero_and_non_numeric() {
+        assert!(parse_cli(&argv(&["--threads", "0", "info"])).is_err());
+        assert!(parse_cli(&argv(&["--threads", "x", "info"])).is_err());
+        let cli = parse_cli(&argv(&["--threads", "2", "info"])).unwrap();
+        assert_eq!(cli.threads, Some(2));
+    }
+
+    #[test]
+    fn stream_only_applies_to_serve() {
+        assert!(parse_cli(&argv(&["info", "--stream", "5"])).is_err());
+        assert!(parse_cli(&argv(&["--stream", "5"])).is_err());
     }
 }

@@ -124,10 +124,15 @@ impl RunningStats {
 #[derive(Clone, Debug, Default)]
 pub struct Timings {
     samples_us: Vec<f64>,
+    /// Sorted view of `samples_us`, built on the first percentile query and
+    /// reused until the next push — `summary()` asks for three order
+    /// statistics and must not pay three O(n log n) sorts.
+    sorted: std::cell::OnceCell<Vec<f64>>,
 }
 
 impl Timings {
     pub fn push(&mut self, dur: std::time::Duration) {
+        self.sorted.take();
         self.samples_us.push(dur.as_secs_f64() * 1e6);
     }
 
@@ -150,8 +155,11 @@ impl Timings {
         if self.samples_us.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = self.sorted.get_or_init(|| {
+            let mut s = self.samples_us.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        });
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)]
     }
@@ -248,6 +256,20 @@ mod tests {
         }
         assert!(t.percentile_us(50.0) <= t.percentile_us(99.0));
         assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn timings_percentiles_track_new_samples() {
+        // the sorted cache must be invalidated by push, not frozen at the
+        // first percentile query
+        let mut t = Timings::default();
+        t.push(std::time::Duration::from_micros(100));
+        assert_eq!(t.percentile_us(50.0), 100.0);
+        t.push(std::time::Duration::from_micros(300));
+        t.push(std::time::Duration::from_micros(200));
+        assert_eq!(t.percentile_us(0.0), 100.0);
+        assert_eq!(t.percentile_us(50.0), 200.0);
+        assert_eq!(t.percentile_us(100.0), 300.0);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Gradcheck suite for the analytic theta gradients.
+//!
+//! The native O-SVGP step returns an analytic g_theta (PR: "exterminate
+//! finite differences"); this suite central-differences the *returned
+//! loss* — via the f64 re-exposure `step_loss_f64`, so f32 output rounding
+//! cannot swamp the quotient — and demands 1e-4 relative agreement for
+//! every raw theta entry, for every kernel family `Kernel::from_kind`
+//! exposes, at d ∈ {1, 2}, on a masked (partial) batch.  The WISKI
+//! closed-form noise gradient gets the same treatment against
+//! `mll_value_f64` on conditioned caches.
+//!
+//! The FD step is applied to the f32 theta tensor and the quotient divides
+//! by the *effective* (post-rounding) step, so the difference measures the
+//! same perturbation the loss saw.
+
+use wiski::backend::native::{mll_value_f64, step_loss_f64};
+use wiski::backend::{Executor, NativeBackend};
+use wiski::kernels::{inv_softplus, Kernel};
+use wiski::rng::Rng;
+use wiski::runtime::Tensor;
+
+const EPS: f32 = 5e-4;
+
+/// The eleven `osvgp_step_*` inputs: random inducing points and batch, a
+/// non-trivial q (random strict-lower entries in q_raw), a theta_old that
+/// differs from theta (the old-posterior KL terms are constants in theta
+/// and must not leak into the gradient), and a masked-out final point.
+fn step_inputs(kind: &str, m: usize, d: usize, q: usize, seed: u64) -> Vec<Tensor> {
+    let kernel = Kernel::from_kind(kind, d);
+    let td = kernel.theta_dim();
+    let mut rng = Rng::new(seed);
+    let mut q_raw = vec![0f32; m * m];
+    for i in 0..m {
+        for j in 0..i {
+            q_raw[i * m + j] = rng.range(-0.2, 0.2) as f32;
+        }
+        q_raw[i * m + i] = inv_softplus(1.0) as f32;
+    }
+    let mut old_l = vec![0f32; m * m];
+    for i in 0..m {
+        old_l[i * m + i] = 1.0;
+    }
+    let z: Vec<f32> = (0..m * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let theta: Vec<f32> = kernel.default_theta(0.2).iter().map(|&v| v as f32).collect();
+    assert_eq!(theta.len(), td);
+    let theta_old: Vec<f32> = kernel
+        .default_theta(0.3)
+        .iter()
+        .map(|&v| (v + rng.range(-0.1, 0.1)) as f32)
+        .collect();
+    let q_mu: Vec<f32> = (0..m).map(|_| (0.3 * rng.normal()) as f32).collect();
+    let old_mu: Vec<f32> = (0..m).map(|_| (0.1 * rng.normal()) as f32).collect();
+    let x: Vec<f32> = (0..q * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let y: Vec<f32> = (0..q).map(|_| rng.normal() as f32).collect();
+    let mut mask = vec![1.0f32; q];
+    mask[q - 1] = 0.0; // partial batch: the padded point must not contribute
+    vec![
+        Tensor::vec1(q_mu),
+        Tensor::new(vec![m, m], q_raw),
+        Tensor::vec1(theta),
+        Tensor::new(vec![m, d], z),
+        Tensor::vec1(theta_old),
+        Tensor::vec1(old_mu),
+        Tensor::new(vec![m, m], old_l),
+        Tensor::new(vec![q, d], x),
+        Tensor::vec1(y),
+        Tensor::vec1(mask),
+        Tensor::scalar(0.1),
+    ]
+}
+
+fn gradcheck_family(kind: &str, d: usize) {
+    let (m, q) = (12, 3);
+    let td = Kernel::from_kind(kind, d).theta_dim();
+    let mut be = NativeBackend::empty();
+    be.add_osvgp_family(kind, d, m, q, 4);
+    let name = format!("osvgp_step_{kind}_d{d}_m{m}_q{q}");
+    let ins = step_inputs(kind, m, d, q, 7 + d as u64);
+    let out = be.exec(&name, &ins).unwrap();
+    let g_theta = &out[3];
+    assert_eq!(g_theta.data.len(), td);
+    for j in 0..td {
+        let mut plus = ins.clone();
+        let mut minus = ins.clone();
+        plus[2].data[j] += EPS;
+        minus[2].data[j] -= EPS;
+        let h = plus[2].data[j] as f64 - minus[2].data[j] as f64;
+        let fd = (step_loss_f64(kind, m, d, q, &plus) - step_loss_f64(kind, m, d, q, &minus)) / h;
+        let g = g_theta.data[j] as f64;
+        assert!(
+            (g - fd).abs() <= 1e-4 * (1.0 + fd.abs()),
+            "{kind} d={d} theta[{j}]: analytic {g} vs fd {fd}"
+        );
+    }
+}
+
+#[test]
+fn osvgp_theta_grad_rbf_d1() {
+    gradcheck_family("rbf", 1);
+}
+
+#[test]
+fn osvgp_theta_grad_rbf_d2() {
+    gradcheck_family("rbf", 2);
+}
+
+#[test]
+fn osvgp_theta_grad_matern12_d1() {
+    gradcheck_family("matern12", 1);
+}
+
+#[test]
+fn osvgp_theta_grad_matern12_d2() {
+    gradcheck_family("matern12", 2);
+}
+
+#[test]
+fn osvgp_theta_grad_sm2_d1() {
+    gradcheck_family("sm2", 1);
+}
+
+#[test]
+fn osvgp_theta_grad_sm2_d2() {
+    // the SM kernel is 1-D (reads coordinate 0); d=2 inputs still exercise
+    // the full contraction machinery on 2-D point buffers
+    gradcheck_family("sm2", 2);
+}
+
+#[test]
+fn osvgp_theta_grad_sm4_d1() {
+    gradcheck_family("sm4", 1);
+}
+
+/// WISKI: after conditioning on a short stream, the mll gradient's noise
+/// entry (closed form through `mll_at_s2`) — and every kernel entry, which
+/// ride the structured contraction path — must match central FD of the f64
+/// MLL value.
+#[test]
+fn wiski_mll_grad_matches_fd_including_noise() {
+    let (kind, d, g, r) = ("rbf", 2, 8usize, 64usize);
+    let mut be = NativeBackend::empty();
+    be.add_wiski_family(kind, d, g, r, 1, 256, true);
+    let m = g.pow(d as u32);
+    let theta = vec![0.4f32, 0.6, 0.3, -1.2];
+    let mut caches: Vec<Tensor> = vec![
+        Tensor::vec1(theta),
+        Tensor::zeros(&[m]),
+        Tensor::scalar(0.0),
+        Tensor::scalar(0.0),
+        Tensor::zeros(&[m, r]),
+        Tensor::zeros(&[r, r]),
+        Tensor::scalar(0.0),
+    ];
+    let mut rng = Rng::new(17);
+    for _ in 0..12 {
+        let mut ins = caches.clone();
+        ins.push(Tensor::new(
+            vec![1, 2],
+            vec![rng.range(-0.8, 0.8) as f32, rng.range(-0.8, 0.8) as f32],
+        ));
+        ins.push(Tensor::vec1(vec![rng.normal() as f32]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        ins.push(Tensor::vec1(vec![1.0]));
+        let out = be.exec("wiski_step_rbf_d2_g8_r64_q1", &ins).unwrap();
+        for (slot, t) in caches[1..7].iter_mut().zip(out[0..6].iter()) {
+            *slot = t.clone();
+        }
+    }
+    let out = be.exec("wiski_mll_rbf_d2_g8_r64", &caches).unwrap();
+    let grad = &out[1];
+    assert_eq!(grad.data.len(), 4);
+    for j in 0..4 {
+        let mut plus = caches.clone();
+        let mut minus = caches.clone();
+        plus[0].data[j] += EPS;
+        minus[0].data[j] -= EPS;
+        let h = plus[0].data[j] as f64 - minus[0].data[j] as f64;
+        let fd = (mll_value_f64(kind, d, g, r, &plus) - mll_value_f64(kind, d, g, r, &minus)) / h;
+        let ga = grad.data[j] as f64;
+        assert!(
+            (ga - fd).abs() <= 1e-4 * (1.0 + fd.abs()),
+            "wiski theta[{j}]: analytic {ga} vs fd {fd}"
+        );
+    }
+}

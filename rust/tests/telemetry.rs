@@ -97,7 +97,10 @@ fn coordinator_populates_server_telemetry() {
     assert_eq!(stats.observed, 40);
     assert_eq!(stats.observe_latency.count(), stats.observe_batches);
     assert!(stats.p99_observe_us() >= stats.p50_observe_us());
-    assert!(stats.max_queue_depth >= 1 && stats.max_queue_depth <= 4);
+    // the high-water mark measures the true pending backlog (not the
+    // batch_q-capped micro-batch size), so it can legitimately exceed 4
+    // but never the number of observations sent
+    assert!(stats.max_queue_depth >= 1 && stats.max_queue_depth <= 40);
     assert!(
         telemetry::histogram("server.observe_batch").count()
             >= batch_spans + stats.observe_batches
