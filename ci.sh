@@ -66,10 +66,20 @@ echo "== structured + telemetry + gradcheck suites under WISKI_THREADS=4 =="
 # at any thread count.
 WISKI_THREADS=4 cargo test -q --test structured --test telemetry --test osvgp_grad
 
+echo "== SIMD determinism: structured + parallel suites, forced scalar then auto =="
+# The dense kernels dispatch to AVX2/NEON at runtime under a bitwise-
+# determinism contract (no FMA, lanes are distinct outputs).  Run the
+# structured and parallel suites twice — once with WISKI_SIMD=0 pinning the
+# scalar fallback (the env pin wins over everything, including the tests'
+# own set_enabled(true) calls), once under default auto-dispatch — so both
+# sides of every scalar-vs-SIMD comparison execute for real on this arch.
+WISKI_SIMD=0 cargo test -q --test structured --test parallel
+cargo test -q --test parallel
+
 echo "== cargo bench -- --list =="
 bench_list=$(cargo bench -- --list)
 printf '%s\n' "$bench_list"
-for bench_name in wiski_kuu perf gemm osvgp; do
+for bench_name in wiski_kuu perf gemm osvgp simd; do
     if ! printf '%s\n' "$bench_list" | grep -q "$bench_name"; then
         echo "ci.sh: bench section '$bench_name' missing from --list output" >&2
         exit 1

@@ -38,7 +38,7 @@ const SECTIONS: &[(&str, &str, BenchFn)] = &[
     ("ablation_beta", "Fig A.3: O-SVGP GVI beta ablation", ablation_beta),
     ("ablation_steps", "Fig A.2: O-SVGP grad-steps ablation", ablation_steps),
     ("perf", "microbenchmarks: per-op latencies across (m, r)", perf),
-    ("gemm", "blocked vs naive GEMM at the QSystem hot shapes, threads 1/2/4", gemm),
+    ("gemm", "blocked vs naive GEMM at the QSystem hot shapes, threads 1/2/4, plus simd vs scalar microkernel", gemm),
     ("wiski_kuu", "dense vs structured K_UU: QSystem build + predict, g in {16,32,64}, d=2", wiski_kuu),
     ("osvgp", "analytic vs finite-difference theta gradients: O-SVGP step latency, m in {64,256}", osvgp),
 ];
@@ -548,6 +548,73 @@ fn gemm(_rt: &Arc<dyn Executor>) {
         wiski::par::set_threads(0);
     }
     println!("(every blocked result checked bitwise against the naive reference)");
+    simd_gemm_report();
+}
+
+/// ISSUE 9 tentpole evidence: forced-scalar vs auto-dispatched microkernel
+/// GFLOP/s at the QSystem hot shapes, single-threaded so the ratio
+/// isolates the microkernel (not the worker pool).  Every result — both
+/// paths — is asserted bitwise equal to `matmul_naive` before it is timed
+/// into a row; a fast-but-wrong kernel cannot produce a row at all.
+/// Returns the JSON fragment `wiski_kuu` embeds under its top-level
+/// `"simd"` key so BENCH_wiski_kuu.json carries the comparison.
+fn simd_gemm_report() -> String {
+    use wiski::linalg::Mat;
+    use wiski::simd;
+
+    fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    }
+
+    let path = simd::path().as_str().to_string();
+    println!("\n  simd microkernel vs forced scalar (1 thread, dispatch path: {path}):");
+    println!("  (m, k, n)             path     ms    GFLOP/s    speedup");
+    wiski::par::set_threads(1);
+    let shapes = [(256usize, 4096usize, 256usize), (4096, 256, 256), (512, 512, 512)];
+    let mut rows = Vec::new();
+    for &(m, k, n) in &shapes {
+        let a = Mat::from_fn(m, k, |i, j| ((i * k + j) as f64 * 0.013).sin());
+        let b = Mat::from_fn(k, n, |i, j| ((i * n + j) as f64 * 0.007).cos());
+        let gflops = 2.0 * (m * k * n) as f64 / 1e9;
+        let c_ref = a.matmul_naive(&b);
+
+        simd::set_enabled(false);
+        assert_eq!(a.matmul_blocked(&b).data, c_ref.data, "scalar blocked GEMM not bitwise exact");
+        let scalar_ms = time_ms(2, || {
+            std::hint::black_box(a.matmul_blocked(&b));
+        });
+        simd::set_enabled(true);
+        assert_eq!(a.matmul_blocked(&b).data, c_ref.data, "simd blocked GEMM not bitwise exact");
+        let simd_ms = time_ms(2, || {
+            std::hint::black_box(a.matmul_blocked(&b));
+        });
+
+        let (sg, vg) = (gflops / (scalar_ms / 1e3), gflops / (simd_ms / 1e3));
+        let speedup = scalar_ms / simd_ms;
+        println!("  ({m:>4},{k:>5},{n:>4})   scalar {scalar_ms:>8.1} {sg:>9.2}      1.00x");
+        println!("  ({m:>4},{k:>5},{n:>4})   {path:>6} {simd_ms:>8.1} {vg:>9.2} {speedup:>9.2}x");
+        rows.push(format!(
+            "      {{\"m\": {m}, \"k\": {k}, \"n\": {n}, \"scalar_ms\": {scalar_ms:.2}, \
+             \"scalar_gflops\": {sg:.2}, \"simd_ms\": {simd_ms:.2}, \"simd_gflops\": {vg:.2}, \
+             \"speedup\": {speedup:.2}}}"
+        ));
+    }
+    wiski::par::set_threads(0);
+    let note = if path == "scalar" {
+        "dispatch resolved to scalar (no AVX2/NEON on this arch or WISKI_SIMD=0): \
+         both columns run the same microkernel, speedup ~1.0 expected"
+    } else {
+        "single-threaded so the ratio isolates the microkernel; both paths \
+         asserted bitwise equal to matmul_naive before timing"
+    };
+    format!(
+        "{{\"path\": \"{path}\", \"note\": \"{note}\", \"rows\": [\n{}\n    ]}}",
+        rows.join(",\n")
+    )
 }
 
 // --------------------------------------------------------------- wiski_kuu --
@@ -834,14 +901,17 @@ fn wiski_kuu(_rt: &Arc<dyn Executor>) {
         telemetry::snapshot().to_json()
     );
 
+    let simd_json = simd_gemm_report();
     let json = format!(
         "{{\n  \"bench\": \"wiski_kuu\",\n  \"d\": 2,\n  \"unit\": \"ms\",\n  \
          \"note\": \"step = QSystem build + theta-grad contraction (q=1); predict = 256-query batch; \
          warm = QSystem cache hit; telemetry.step_latency_vs_n = 64-step windows through the \
          instrumented stack (g=16 r=64); telemetry.threads_sweep = worker-pool step latency at \
-         g=64 krank>=128 over 1/2/4 threads; produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ],\n  \
-         \"telemetry\": {}\n}}\n",
+         g=64 krank>=128 over 1/2/4 threads; simd = forced-scalar vs dispatched GEMM microkernel \
+         GFLOP/s at 1 thread; produced by `cargo bench -- wiski_kuu`\",\n  \"rows\": [\n{}\n  ],\n  \
+         \"simd\": {},\n  \"telemetry\": {}\n}}\n",
         rows_json.join(",\n"),
+        simd_json,
         telemetry_json
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_wiski_kuu.json");

@@ -66,9 +66,15 @@ pub fn select_by_max_variance<M: OnlineGp>(
     q: usize,
 ) -> Result<Vec<usize>> {
     let preds = model.predict(eval_set)?;
-    let mut by_var: Vec<(f64, usize)> =
-        preds.iter().enumerate().map(|(i, p)| (p.var_f, i)).collect();
-    by_var.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp + finite filter: a NaN variance from an ill-conditioned
+    // model must neither panic the sort nor outrank real candidates
+    let mut by_var: Vec<(f64, usize)> = preds
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.var_f.is_finite())
+        .map(|(i, p)| (p.var_f, i))
+        .collect();
+    by_var.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut chosen = Vec::with_capacity(q);
     for &(_, ti) in by_var.iter().take(q) {
         let target = &eval_set[ti];

@@ -48,6 +48,14 @@ fn erf(x: f64) -> f64 {
 }
 
 pub fn acq_value(kind: AcqKind, mean: f64, var: f64) -> f64 {
+    // An ill-conditioned model can emit non-finite moments.  Propagate NaN
+    // explicitly so callers can filter the point out: `var.max(1e-12)`
+    // would otherwise silently launder a NaN variance into the 1e-12 floor
+    // (f64::max ignores NaN) and hand the optimizer a confident garbage
+    // score.
+    if !mean.is_finite() || !var.is_finite() {
+        return f64::NAN;
+    }
     let sd = var.max(1e-12).sqrt();
     match kind {
         AcqKind::Ucb { beta } => mean + beta * sd,
@@ -73,12 +81,16 @@ pub fn maximize_acquisition<M: OnlineGp>(
         .map(|_| (0..d).map(|_| rng.range(-1.0, 1.0)).collect())
         .collect();
     let preds = model.predict(&cands)?;
+    // Non-finite scores (NaN mean/variance from an ill-conditioned model)
+    // are dropped before ranking, and the sort is total_cmp — one bad
+    // candidate must never panic the whole BO loop or outrank real points.
     let mut scored: Vec<(f64, usize)> = preds
         .iter()
         .enumerate()
         .map(|(i, p)| (acq_value(opts.kind, p.mean, p.var_f), i))
+        .filter(|(s, _)| s.is_finite())
         .collect();
-    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     // stage 2: coordinate refinement of the top `restarts` candidates.
     // All restarts' +/- trials for one sweep are evaluated in a SINGLE
@@ -92,6 +104,11 @@ pub fn maximize_acquisition<M: OnlineGp>(
         .collect();
     let mut step = 0.25;
     for _ in 0..opts.refine_iters {
+        if refined.is_empty() {
+            // every pool candidate scored non-finite; the random top-up
+            // below still returns a full batch
+            break;
+        }
         let mut trials: Vec<Vec<f64>> = Vec::with_capacity(2 * d * refined.len());
         for (_, x) in &refined {
             for k in 0..d {
@@ -122,7 +139,7 @@ pub fn maximize_acquisition<M: OnlineGp>(
             }
         }
     }
-    refined.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    refined.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     // greedy batch with repulsion so q points spread
     let mut batch: Vec<Vec<f64>> = Vec::with_capacity(q);
@@ -147,8 +164,106 @@ pub fn maximize_acquisition<M: OnlineGp>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gp::{ExactGp, SolveMethod};
+    use crate::gp::{ExactGp, Prediction, SolveMethod};
     use crate::kernels::Kernel;
+
+    /// Model stub whose predictions cycle through poisoned moments: NaN
+    /// mean, NaN variance, and (every third point) a sane finite pair —
+    /// the ill-conditioned-model shape the ISSUE regression calls for.
+    struct NanVarModel;
+
+    impl OnlineGp for NanVarModel {
+        fn name(&self) -> &str {
+            "nan-var-stub"
+        }
+        fn num_observed(&self) -> usize {
+            0
+        }
+        fn observe(&mut self, _x: &[f64], _y: f64) -> Result<()> {
+            Ok(())
+        }
+        fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+            Ok(xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| match i % 3 {
+                    0 => Prediction { mean: f64::NAN, var_f: 0.2, var_y: 0.25 },
+                    1 => Prediction { mean: 0.0, var_f: f64::NAN, var_y: f64::NAN },
+                    _ => Prediction { mean: x[0], var_f: 0.1, var_y: 0.15 },
+                })
+                .collect())
+        }
+    }
+
+    /// Model stub where *every* prediction has NaN variance — the pool
+    /// filters to empty and the batch must still come back full of finite
+    /// random points instead of panicking.
+    struct AllNanModel;
+
+    impl OnlineGp for AllNanModel {
+        fn name(&self) -> &str {
+            "all-nan-stub"
+        }
+        fn num_observed(&self) -> usize {
+            0
+        }
+        fn observe(&mut self, _x: &[f64], _y: f64) -> Result<()> {
+            Ok(())
+        }
+        fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+            Ok(xs
+                .iter()
+                .map(|_| Prediction { mean: 0.0, var_f: f64::NAN, var_y: f64::NAN })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn acq_value_propagates_non_finite_moments_as_nan() {
+        for kind in [AcqKind::Ucb { beta: 1.0 }, AcqKind::Ei { best: 0.5 }] {
+            assert!(acq_value(kind, f64::NAN, 0.1).is_nan());
+            assert!(acq_value(kind, 0.0, f64::NAN).is_nan());
+            assert!(acq_value(kind, f64::INFINITY, 0.1).is_nan());
+            assert!(acq_value(kind, 0.0, 0.1).is_finite());
+        }
+    }
+
+    #[test]
+    fn nan_variance_model_neither_panics_nor_wins() {
+        // pre-fix this panicked in the partial_cmp sort; post-fix the NaN
+        // candidates are filtered and the batch is entirely finite
+        let mut m = NanVarModel;
+        let batch = maximize_acquisition(
+            &mut m,
+            2,
+            3,
+            AcqOptions { kind: AcqKind::Ucb { beta: 1.0 }, restarts: 4, refine_iters: 3 },
+            1,
+        )
+        .unwrap();
+        assert_eq!(batch.len(), 3);
+        for x in &batch {
+            assert_eq!(x.len(), 2);
+            assert!(x.iter().all(|v| v.is_finite()), "non-finite coordinate in {x:?}");
+        }
+    }
+
+    #[test]
+    fn all_nan_pool_falls_back_to_random_batch() {
+        let mut m = AllNanModel;
+        let batch = maximize_acquisition(
+            &mut m,
+            2,
+            4,
+            AcqOptions { kind: AcqKind::Ei { best: 0.0 }, restarts: 3, refine_iters: 2 },
+            2,
+        )
+        .unwrap();
+        assert_eq!(batch.len(), 4);
+        for x in &batch {
+            assert!(x.iter().all(|v| v.is_finite() && (-1.0..=1.0).contains(v)));
+        }
+    }
 
     #[test]
     fn erf_matches_known_values() {

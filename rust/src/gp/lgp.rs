@@ -71,7 +71,11 @@ impl LocalGps {
             .map(|(i, m)| {
                 (i, self.kernel.eval(&self.theta, &m.center, x) / kxx)
             })
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            // total_cmp + finite filter: a NaN similarity (degenerate
+            // center) must neither panic routing nor win max_by (positive
+            // NaN sorts above +inf under the IEEE total order)
+            .filter(|(_, s)| s.is_finite())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
     }
 }
 

@@ -30,6 +30,10 @@
 //!   `--threads`) behind the blocked GEMM, batched triangular solves, and
 //!   batched operator matvecs — bitwise-identical results at any thread
 //!   count.
+//! - [`simd`]: runtime-dispatched AVX2/NEON kernels (GEMM microkernel,
+//!   FFT butterfly, dot/axpy, triangular-solve sweeps) under the same
+//!   bitwise-determinism contract — no FMA, lanes are distinct outputs;
+//!   `WISKI_SIMD=0` / `--no-simd` force the scalar fallback.
 //! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
 //!   (the paper's §5.3 / §5.4 applications).
 //! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
@@ -66,4 +70,5 @@ pub mod optim;
 pub mod par;
 pub mod rng;
 pub mod runtime;
+pub mod simd;
 pub mod telemetry;

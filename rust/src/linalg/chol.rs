@@ -111,9 +111,12 @@ impl Cholesky {
 
     /// Solve L X = B for every column of B in one forward traversal.  Each
     /// row of L is read once for all right-hand sides (instead of once per
-    /// column), and the inner update runs along contiguous rows of X.
+    /// column), and the inner update runs along contiguous rows of X
+    /// through the SIMD-dispatched sweeps ([`crate::simd::sub_scaled`] /
+    /// [`crate::simd::div_inplace`] — lanes are distinct columns).
     /// Per-element operation order matches [`Cholesky::solve_lower`]
-    /// exactly, so the result is bitwise equal to the column-by-column path.
+    /// exactly, so the result is bitwise equal to the column-by-column path
+    /// on every dispatch.
     pub fn solve_lower_cols(&self, b: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(b.rows, n);
@@ -125,22 +128,18 @@ impl Cholesky {
             let xi = &mut tail[..w];
             for (k, &lik) in lrow[..i].iter().enumerate() {
                 let xk = &head[k * w..(k + 1) * w];
-                for (v, &u) in xi.iter_mut().zip(xk) {
-                    *v -= lik * u;
-                }
+                crate::simd::sub_scaled(lik, xk, xi);
             }
-            let d = lrow[i];
-            for v in xi.iter_mut() {
-                *v /= d;
-            }
+            crate::simd::div_inplace(xi, lrow[i]);
         }
         x
     }
 
     /// Solve L^T X = B for every column of B in one backward traversal.
     /// Works on a pre-transposed copy of L so the k-loop streams one
-    /// contiguous row instead of striding down a column.  Bitwise equal to
-    /// per-column [`Cholesky::solve_upper`].
+    /// contiguous row instead of striding down a column; the sweeps run
+    /// through the same SIMD dispatch as [`Cholesky::solve_lower_cols`].
+    /// Bitwise equal to per-column [`Cholesky::solve_upper`].
     pub fn solve_upper_cols(&self, b: &Mat) -> Mat {
         let n = self.n();
         assert_eq!(b.rows, n);
@@ -152,16 +151,10 @@ impl Cholesky {
             let (head, tail) = x.data.split_at_mut((i + 1) * w);
             let xi = &mut head[i * w..];
             for k in (i + 1)..n {
-                let lki = ltrow[k];
                 let xk = &tail[(k - i - 1) * w..(k - i) * w];
-                for (v, &u) in xi.iter_mut().zip(xk) {
-                    *v -= lki * u;
-                }
+                crate::simd::sub_scaled(ltrow[k], xk, xi);
             }
-            let d = ltrow[i];
-            for v in xi.iter_mut() {
-                *v /= d;
-            }
+            crate::simd::div_inplace(xi, ltrow[i]);
         }
         x
     }

@@ -1,16 +1,91 @@
 //! Radix-2 complex FFT (iterative Cooley–Tukey) — substrate for the
 //! Toeplitz matvec (circulant embedding) used by structured K_UU algebra.
+//!
+//! Twiddle factors are tabulated, each computed **directly** from
+//! `(k as f64 * ang).sin_cos()`.  The previous implementation generated
+//! them with the per-stage recurrence `(cr,ci) ← (cr·wr−ci·wi, cr·wi+ci·wr)`,
+//! which compounds one rounding per butterfly and loses O(len·ε) accuracy
+//! across a stage — at n = 4096 that is ~20× more error than the direct
+//! table (the regression test below pins both sides of that gap).  Large
+//! lattices (g ≥ 128 per dimension) run their Kronecker-Toeplitz matvecs
+//! through exactly these long transforms, so the digits matter.
+//!
+//! Tables are cached per length: a thread-local list fronting a global
+//! registry, because [`crate::par`] spawns fresh scoped workers per
+//! dispatch (a pure thread-local would rebuild the table on every fan-out).
+//! The butterfly inner loop runs through [`crate::simd::butterfly`], which
+//! dispatches to AVX2/NEON forms of the identical operation sequence —
+//! bitwise equal to the scalar loop on every path.
 
+use std::cell::RefCell;
 use std::f64::consts::PI;
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// In-place FFT of interleaved complex data (re, im). len must be a power
-/// of two. `inverse` applies the conjugate transform *without* the 1/n
-/// normalization (callers of `ifft_inplace` get the normalized version).
-fn fft_core(re: &mut [f64], im: &mut [f64], inverse: bool) {
+/// Flat-packed per-stage twiddle tables for one transform length `n`.
+/// The stage with half-length `h` (butterfly span `2h`) occupies
+/// `[h-1, 2h-1)`; entry `k` holds `w = e^{-2πik/(2h)}`.  The offsets tile
+/// exactly: Σ_{s < log₂ h} 2^s = h−1.  `im_inv` is the exact negation of
+/// `im` (the conjugate transform), so forward and inverse share one table
+/// and the inverse stays the bitwise mirror of the forward pass.
+struct Twiddles {
+    n: usize,
+    re: Vec<f64>,
+    im: Vec<f64>,
+    im_inv: Vec<f64>,
+}
+
+fn build_twiddles(n: usize) -> Twiddles {
+    let mut re = vec![0.0; n.saturating_sub(1)];
+    let mut im = vec![0.0; n.saturating_sub(1)];
+    let mut h = 1usize;
+    while h < n {
+        let ang = -PI / h as f64; // -2π/(2h)
+        for k in 0..h {
+            let (s, c) = (k as f64 * ang).sin_cos();
+            re[h - 1 + k] = c;
+            im[h - 1 + k] = s;
+        }
+        h <<= 1;
+    }
+    let im_inv = im.iter().map(|v| -v).collect();
+    Twiddles { n, re, im, im_inv }
+}
+
+/// Process-wide table registry: tables depend only on `n`, so sharing
+/// across threads is free determinism-wise.  Built inside the lock — a
+/// table is O(n) sin_cos, paid once per distinct length per process.
+fn shared_twiddles(n: usize) -> Arc<Twiddles> {
+    static REG: OnceLock<Mutex<Vec<Arc<Twiddles>>>> = OnceLock::new();
+    let reg = REG.get_or_init(|| Mutex::new(Vec::new()));
+    let mut tables = reg.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(t) = tables.iter().find(|t| t.n == n) {
+        return t.clone();
+    }
+    let t = Arc::new(build_twiddles(n));
+    tables.push(t.clone());
+    t
+}
+
+/// Per-thread front cache so repeated transforms (the Toeplitz matvec hot
+/// path runs thousands per predict) never touch the registry lock.
+fn twiddles_for(n: usize) -> Arc<Twiddles> {
+    thread_local! {
+        static LOCAL: RefCell<Vec<Arc<Twiddles>>> = const { RefCell::new(Vec::new()) };
+    }
+    LOCAL.with(|l| {
+        if let Some(t) = l.borrow().iter().find(|t| t.n == n) {
+            return t.clone();
+        }
+        let t = shared_twiddles(n);
+        l.borrow_mut().push(t.clone());
+        t
+    })
+}
+
+/// Bit-reversal permutation shared by the live FFT and the legacy
+/// reference embedded in the accuracy regression test.
+fn bit_reverse(re: &mut [f64], im: &mut [f64]) {
     let n = re.len();
-    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
-    assert_eq!(im.len(), n);
-    // bit reversal permutation
     let mut j = 0usize;
     for i in 1..n {
         let mut bit = n >> 1;
@@ -24,28 +99,30 @@ fn fft_core(re: &mut [f64], im: &mut [f64], inverse: bool) {
             im.swap(i, j);
         }
     }
-    let sign = if inverse { 1.0 } else { -1.0 };
+}
+
+/// In-place FFT of split complex data (re, im). len must be a power of
+/// two. `inverse` applies the conjugate transform *without* the 1/n
+/// normalization (callers of `ifft_inplace` get the normalized version).
+fn fft_core(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    assert_eq!(im.len(), n);
+    if n < 2 {
+        return;
+    }
+    bit_reverse(re, im);
+    let tw = twiddles_for(n);
     let mut len = 2;
     while len <= n {
-        let ang = sign * 2.0 * PI / len as f64;
-        let (wr, wi) = (ang.cos(), ang.sin());
+        let h = len / 2;
+        let w_re = &tw.re[h - 1..2 * h - 1];
+        let w_im = if inverse { &tw.im_inv[h - 1..2 * h - 1] } else { &tw.im[h - 1..2 * h - 1] };
         let mut i = 0;
         while i < n {
-            let (mut cr, mut ci) = (1.0f64, 0.0f64);
-            for k in 0..len / 2 {
-                let (ur, ui) = (re[i + k], im[i + k]);
-                let (vr, vi) = (
-                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
-                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
-                );
-                re[i + k] = ur + vr;
-                im[i + k] = ui + vi;
-                re[i + k + len / 2] = ur - vr;
-                im[i + k + len / 2] = ui - vi;
-                let (ncr, nci) = (cr * wr - ci * wi, cr * wi + ci * wr);
-                cr = ncr;
-                ci = nci;
-            }
+            let (re_lo, re_hi) = re[i..i + len].split_at_mut(h);
+            let (im_lo, im_hi) = im[i..i + len].split_at_mut(h);
+            crate::simd::butterfly(re_lo, im_lo, re_hi, im_hi, w_re, w_im);
             i += len;
         }
         len <<= 1;
@@ -61,12 +138,8 @@ pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
 pub fn ifft_inplace(re: &mut [f64], im: &mut [f64]) {
     fft_core(re, im, true);
     let n = re.len() as f64;
-    for v in re.iter_mut() {
-        *v /= n;
-    }
-    for v in im.iter_mut() {
-        *v /= n;
-    }
+    crate::simd::div_inplace(re, n);
+    crate::simd::div_inplace(im, n);
 }
 
 #[cfg(test)]
@@ -99,12 +172,120 @@ mod tests {
         for k in 0..n {
             let (mut sr, mut si) = (0.0, 0.0);
             for (t, xt) in x.iter().enumerate() {
-                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
                 sr += xt * ang.cos();
                 si += xt * ang.sin();
             }
             assert!((re[k] - sr).abs() < 1e-10);
             assert!((im[k] - si).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn length_one_transform_is_identity() {
+        let (mut re, mut im) = (vec![3.5], vec![-1.25]);
+        fft_inplace(&mut re, &mut im);
+        assert_eq!((re[0], im[0]), (3.5, -1.25));
+        ifft_inplace(&mut re, &mut im);
+        assert_eq!((re[0], im[0]), (3.5, -1.25));
+    }
+
+    /// The exact pre-fix transform: per-stage twiddle recurrence
+    /// `(cr,ci) ← (cr·wr−ci·wi, cr·wi+ci·wr)` seeded from one sin/cos per
+    /// stage.  Kept verbatim (minus the dead `inverse` arm) as the
+    /// baseline the accuracy regression measures against.
+    fn fft_legacy_recurrence(re: &mut [f64], im: &mut [f64]) {
+        let n = re.len();
+        bit_reverse(re, im);
+        let mut len = 2;
+        while len <= n {
+            let ang = -2.0 * PI / len as f64;
+            let (wr, wi) = (ang.cos(), ang.sin());
+            let mut i = 0;
+            while i < n {
+                let (mut cr, mut ci) = (1.0f64, 0.0f64);
+                for k in 0..len / 2 {
+                    let (ur, ui) = (re[i + k], im[i + k]);
+                    let (vr, vi) = (
+                        re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                        re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                    );
+                    re[i + k] = ur + vr;
+                    im[i + k] = ui + vi;
+                    re[i + k + len / 2] = ur - vr;
+                    im[i + k + len / 2] = ui - vi;
+                    let (ncr, nci) = (cr * wr - ci * wi, cr * wi + ci * wr);
+                    cr = ncr;
+                    ci = nci;
+                }
+                i += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// ISSUE 9 satellite: at n = 4096 the legacy recurrence accumulates
+    /// O(len·ε) twiddle drift and misses the naive DFT by a few 1e-12,
+    /// while the direct-sin_cos table stays near 1e-13.  The tolerance is
+    /// chosen so the old transform FAILS it and the new one clears it with
+    /// an order of magnitude to spare; the 5× separation assertion keeps
+    /// the test meaningful even if both errors drift with the input seed.
+    /// (Sampled bins: a full 4096² naive DFT would be ~17M sin/cos — too
+    /// slow for a debug-mode test, and 22 spread bins bound the max error
+    /// just as well.  Angles use (k·t) mod n to avoid large-argument trig
+    /// error in the reference itself.)
+    #[test]
+    fn large_fft_beats_legacy_recurrence_against_naive_dft() {
+        let n = 4096usize;
+        let mut rng = Rng::new(11);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let (mut re_new, mut im_new) = (x.clone(), vec![0.0; n]);
+        fft_inplace(&mut re_new, &mut im_new);
+        let (mut re_old, mut im_old) = (x.clone(), vec![0.0; n]);
+        fft_legacy_recurrence(&mut re_old, &mut im_old);
+
+        let mut bins: Vec<usize> = (0..n).step_by(256).collect();
+        bins.extend([1, 3, 5, 511, 1023, 2047, 4095]);
+        let (mut err_new, mut err_old) = (0.0f64, 0.0f64);
+        for &k in &bins {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for (t, xt) in x.iter().enumerate() {
+                let ang = -2.0 * PI * ((k * t) % n) as f64 / n as f64;
+                sr += xt * ang.cos();
+                si += xt * ang.sin();
+            }
+            err_new = err_new.max((re_new[k] - sr).abs()).max((im_new[k] - si).abs());
+            err_old = err_old.max((re_old[k] - sr).abs()).max((im_old[k] - si).abs());
+        }
+        const TOL: f64 = 1e-12;
+        assert!(err_new < TOL, "direct-table FFT error {err_new:.3e} exceeds {TOL:.0e}");
+        assert!(
+            err_old > TOL,
+            "legacy recurrence error {err_old:.3e} unexpectedly clears {TOL:.0e} — \
+             the regression bar no longer separates the implementations"
+        );
+        assert!(
+            err_old > 5.0 * err_new,
+            "expected ≥5× accuracy win over the recurrence, got {err_old:.3e} vs {err_new:.3e}"
+        );
+    }
+
+    /// Forward and inverse must share the same table (im_inv is an exact
+    /// negation), so a long roundtrip stays at the 1e-15 scale rather than
+    /// accumulating independent twiddle error.
+    #[test]
+    fn large_roundtrip_stays_tight() {
+        let n = 4096usize;
+        let mut rng = Rng::new(12);
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0; n];
+        fft_inplace(&mut re, &mut im);
+        ifft_inplace(&mut re, &mut im);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-13);
+        }
+        assert!(im.iter().all(|v| v.abs() < 1e-13));
     }
 }

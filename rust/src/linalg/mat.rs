@@ -181,6 +181,9 @@ impl Mat {
 /// Microkernel register tile: MR rows × NR columns of C.
 const MR: usize = 4;
 const NR: usize = 8;
+// the simd microkernel (crate::simd::gemm_ukr_4x8) is specialized to this
+// exact tile shape; changing MR/NR requires a matching kernel there
+const _: () = assert!(MR == 4 && NR == 8, "simd::gemm_ukr_4x8 expects a 4x8 tile");
 /// Cache blocking: MC rows of A per panel (L2), KC depth per pass (L1 for
 /// the packed B strips), NC columns of B per pass (L3 / keeps bpack small).
 const MC: usize = 64;
@@ -267,18 +270,13 @@ fn gemm_row_panel(
 
 /// MR×NR register tile update: acc += A-strip · B-strip over kc depth
 /// steps, p ascending — the accumulation order every other path shares.
+/// Dispatches through [`crate::simd`] to the AVX2/NEON forms of the same
+/// update (broadcast-A × B-row outer product, plain mul+add, never FMA),
+/// so the tile stays bitwise equal to [`Mat::matmul_naive`] whichever
+/// path runs.
 #[inline]
 fn microkernel(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; MR * NR]) {
-    for p in 0..kc {
-        let av = &astrip[p * MR..p * MR + MR];
-        let bv = &bstrip[p * NR..p * NR + NR];
-        for i in 0..MR {
-            let ai = av[i];
-            for j in 0..NR {
-                acc[i * NR + j] += ai * bv[j];
-            }
-        }
-    }
+    crate::simd::gemm_ukr_4x8(astrip, bstrip, kc, acc);
 }
 
 impl Index<(usize, usize)> for Mat {

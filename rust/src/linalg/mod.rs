@@ -18,6 +18,10 @@
 //! triangular traversal across all right-hand sides, and the batched
 //! operator products fan rows across [`crate::par`]'s deterministic worker
 //! pool — all bitwise identical to their single-threaded reference forms.
+//! The innermost loops (GEMM microkernel, FFT butterflies, dot/axpy,
+//! triangular column sweeps) dispatch through [`crate::simd`] to AVX2/NEON
+//! forms of the same operation sequence, bitwise equal to the scalar
+//! fallback on every path.
 
 mod cg;
 mod chol;
@@ -35,10 +39,13 @@ pub use mat::Mat;
 pub use ops::{KronScratch, KroneckerToeplitz, KuuOp};
 pub use toeplitz::ToeplitzMatvec;
 
-/// Dot product.
+/// Dot product under the fixed 4-lane reduction contract (see
+/// [`crate::simd::dot`]): strided partial sums combined in a fixed tree
+/// plus a sequential tail, identical on the scalar, AVX2, and NEON paths —
+/// the result is bitwise stable across dispatches and thread counts.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    crate::simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -46,12 +53,10 @@ pub fn norm(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// y += alpha * x
+/// y += alpha * x (elementwise; scalar and SIMD paths bitwise identical).
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::simd::axpy(alpha, x, y)
 }
 
 #[cfg(test)]

@@ -35,11 +35,14 @@ flags:
   --artifacts DIR          artifact directory for the pjrt backend
   --threads N              worker threads for the blocked compute layer
                            (default: WISKI_THREADS or all cores)
+  --no-simd                force the scalar kernels (disable AVX2/NEON
+                           dispatch; output is bitwise identical either way)
   -h, --help               print this help
 environment:
   WISKI_TRACE=off|pretty|json   telemetry emission (default off)
   WISKI_KUU=dense               force the dense K_UU oracle (native backend)
-  WISKI_THREADS=N               worker threads (overridden by --threads)";
+  WISKI_THREADS=N               worker threads (overridden by --threads)
+  WISKI_SIMD=0|off              force the scalar kernels (same as --no-simd)";
 
 /// Parsed command line: strict — every token must be consumed.
 struct Cli {
@@ -48,6 +51,7 @@ struct Cli {
     artifacts: String,
     stream: Option<usize>,
     threads: Option<usize>,
+    no_simd: bool,
 }
 
 fn die(msg: &str) -> ! {
@@ -65,6 +69,7 @@ fn parse_cli(args: &[String]) -> Result<Cli, String> {
         artifacts: "artifacts".into(),
         stream: None,
         threads: None,
+        no_simd: false,
     };
     let mut it = args.iter().skip(1);
     while let Some(a) = it.next() {
@@ -93,6 +98,7 @@ fn parse_cli(args: &[String]) -> Result<Cli, String> {
                     None => return Err("--threads requires a positive integer".into()),
                 }
             }
+            "--no-simd" => cli.no_simd = true,
             flag if flag.starts_with('-') => return Err(format!("unknown flag {flag:?}")),
             cmd if cli.cmd.is_empty() => match cmd {
                 "info" | "serve" | "check" => cli.cmd = cmd.to_string(),
@@ -117,6 +123,9 @@ fn main() -> Result<()> {
     let cli = parse_cli(&args).unwrap_or_else(|msg| die(&msg));
     if let Some(n) = cli.threads {
         wiski::par::set_threads(n);
+    }
+    if cli.no_simd {
+        wiski::simd::set_enabled(false);
     }
     let rt = match &cli.backend {
         Some(name) => backend_by_name(name, &cli.artifacts)?,
@@ -299,5 +308,15 @@ mod tests {
     fn stream_only_applies_to_serve() {
         assert!(parse_cli(&argv(&["info", "--stream", "5"])).is_err());
         assert!(parse_cli(&argv(&["--stream", "5"])).is_err());
+    }
+
+    #[test]
+    fn no_simd_is_a_bare_flag() {
+        let cli = parse_cli(&argv(&["--no-simd", "info"])).unwrap();
+        assert!(cli.no_simd);
+        let cli = parse_cli(&argv(&["serve", "--no-simd", "--stream", "5"])).unwrap();
+        assert!(cli.no_simd);
+        assert_eq!(cli.stream, Some(5));
+        assert!(!parse_cli(&argv(&["info"])).unwrap().no_simd);
     }
 }

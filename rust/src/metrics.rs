@@ -151,17 +151,25 @@ impl Timings {
         self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
     }
 
+    /// Percentile by the standard nearest-rank (ceil) convention: the
+    /// sample whose sorted rank is ⌈p/100 · n⌉, clamped to [1, n].  This
+    /// matches `telemetry::HistSnapshot::percentile_us` exactly, so exact
+    /// and bucketed percentiles over the same samples agree on which
+    /// sample is "the p50".  (The old fractional-rank `.round()` picked
+    /// the *upper* sample at exact-half ranks — p50 of two samples
+    /// returned the larger one.)  The sort is total_cmp: a stray NaN
+    /// sample must not panic a stats read-out.
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
         }
         let s = self.sorted.get_or_init(|| {
             let mut s = self.samples_us.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s.sort_by(f64::total_cmp);
             s
         });
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        let rank = ((p / 100.0) * s.len() as f64).ceil().max(1.0) as usize;
+        s[rank.min(s.len()) - 1]
     }
 
     pub fn summary(&self) -> String {
@@ -275,5 +283,29 @@ mod tests {
     #[test]
     fn accuracy_counts() {
         assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+    }
+
+    /// ISSUE 9 satellite: nearest-rank (ceil) percentile pins.  The
+    /// distinguishing case versus the old `.round()` formula is an
+    /// exact-half rank — p50 of two samples must be the FIRST (lower)
+    /// sample, where rounding picked the second.
+    #[test]
+    fn percentile_uses_nearest_rank_ceil() {
+        let mut t = Timings::default();
+        t.push(std::time::Duration::from_micros(10));
+        t.push(std::time::Duration::from_micros(20));
+        assert_eq!(t.percentile_us(50.0), 10.0);
+        assert_eq!(t.percentile_us(50.1), 20.0);
+        assert_eq!(t.percentile_us(100.0), 20.0);
+
+        let mut h = Timings::default();
+        for i in 1..=100 {
+            h.push(std::time::Duration::from_micros(i));
+        }
+        // rank ⌈0.99·100⌉ = 99 → the 99th-ranked sample, not the 100th
+        assert_eq!(h.percentile_us(99.0), 99.0);
+        assert_eq!(h.percentile_us(99.1), 100.0);
+        assert_eq!(h.percentile_us(0.0), 1.0); // rank clamps to 1
+        assert_eq!(h.percentile_us(100.0), 100.0);
     }
 }

@@ -1,0 +1,711 @@
+//! SIMD dispatch layer for the dense hot paths, under the repo's
+//! bitwise-determinism contract.
+//!
+//! Every primitive here has a scalar form plus AVX2 (`x86_64`, runtime
+//! `is_x86_feature_detected!`) and NEON (`aarch64`, baseline) forms, and all
+//! three are **bitwise identical** by construction:
+//!
+//! - vector lanes map to *distinct* output elements (or to the fixed
+//!   [`LANES`]-stride partial sums of the dot contract) — no lane ever
+//!   shares an accumulator with another lane;
+//! - each element performs exactly the scalar operation sequence: plain
+//!   IEEE mul then add/sub, k-ascending — **never FMA**, whose single
+//!   rounding would diverge from the scalar reference;
+//! - remainders shorter than a vector run the scalar tail code verbatim.
+//!
+//! The one contract *redefinition* is [`dot`]: a sequential sum cannot be
+//! vectorized bitwise-identically, so the scalar reference itself is the
+//! 4-lane strided reduction (`s[l] = Σ_j a[4j+l]·b[4j+l]`, combined as
+//! `(s0+s1)+(s2+s3)`, sequential tail).  AVX2 keeps the four partials in
+//! one register; NEON keeps them in two; the scalar form keeps them in an
+//! array — all three produce the same bits at every length.
+//!
+//! Dispatch: `WISKI_SIMD=0|off` (env, always wins) or the CLI's
+//! `--no-simd` force the scalar path; otherwise AVX2 when detected, NEON
+//! on aarch64, scalar anywhere else.  The selected path is cached in an
+//! atomic and reported through the `simd.path` gauge (1 = scalar,
+//! 2 = avx2, 3 = neon).  `set_enabled` flips the cache at runtime — the
+//! parallel acceptance suite uses it to prove the forced-scalar and
+//! auto-dispatch legs produce identical bits end to end.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Stride of the dot-product reduction contract (and the f64 width of one
+/// AVX2 register).  Part of the public numeric contract: changing it
+/// changes `dot` results by ~1 ulp everywhere.
+pub const LANES: usize = 4;
+
+/// Which kernel family the next dispatch will take.  The discriminants are
+/// the `simd.path` gauge values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    Scalar = 1,
+    Avx2 = 2,
+    Neon = 3,
+}
+
+impl SimdPath {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+        }
+    }
+}
+
+/// Cached dispatch decision: 0 = uninitialized, else a `SimdPath`
+/// discriminant.  Relaxed is enough — a racing first call just detects
+/// twice and stores the same value.
+static PATH: AtomicU8 = AtomicU8::new(0);
+
+/// `WISKI_SIMD`, parsed once: only `0`/`off` force scalar; anything else
+/// warns (a silently ignored knob is an observability bug) and enables.
+fn env_disabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("WISKI_SIMD") {
+        Err(_) => false,
+        Ok(v) => match v.trim() {
+            "0" | "off" => true,
+            "" | "1" | "on" => false,
+            other => {
+                eprintln!("wiski: ignoring WISKI_SIMD={other:?} (use 0|off to force scalar)");
+                false
+            }
+        },
+    })
+}
+
+fn detect() -> SimdPath {
+    if env_disabled() {
+        return SimdPath::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON with f64 lanes is baseline on aarch64 — no runtime probe.
+        return SimdPath::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdPath::Scalar
+}
+
+fn store(p: SimdPath) -> SimdPath {
+    PATH.store(p as u8, Ordering::Relaxed);
+    crate::telemetry::gauge("simd.path").set(p as u64);
+    p
+}
+
+#[cold]
+fn init() -> SimdPath {
+    store(detect())
+}
+
+/// The dispatch the dense kernels take right now.
+#[inline]
+pub fn path() -> SimdPath {
+    match PATH.load(Ordering::Relaxed) {
+        1 => SimdPath::Scalar,
+        2 => SimdPath::Avx2,
+        3 => SimdPath::Neon,
+        _ => init(),
+    }
+}
+
+/// Enable (re-detect) or disable (force scalar) the vectorized kernels at
+/// runtime — the CLI's `--no-simd` and the test suite's forced-scalar leg.
+/// `WISKI_SIMD=0` in the environment wins either way, so a CI run that
+/// pins the scalar path cannot be un-pinned by code under test.
+pub fn set_enabled(on: bool) {
+    if on {
+        store(detect());
+    } else {
+        store(SimdPath::Scalar);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dot
+// ---------------------------------------------------------------------------
+
+/// Dot product under the [`LANES`]-stride reduction contract: partial sums
+/// `s[l] = Σ_j a[LANES·j+l] · b[LANES·j+l]` combined as
+/// `(s0+s1)+(s2+s3)`, then the remainder folded in sequentially.  Every
+/// path performs this exact per-lane operation sequence, so the result is
+/// bitwise identical across dispatches.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { dot_neon(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let n4 = a.len() & !(LANES - 1);
+    let mut s = [0.0f64; LANES];
+    let mut i = 0;
+    while i < n4 {
+        for l in 0..LANES {
+            s[l] += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+    let mut acc = (s[0] + s[1]) + (s[2] + s[3]);
+    for k in n4..a.len() {
+        acc += a[k] * b[k];
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n4 = a.len() & !(LANES - 1);
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < n4 {
+        let va = _mm256_loadu_pd(pa.add(i));
+        let vb = _mm256_loadu_pd(pb.add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+        i += LANES;
+    }
+    let mut s = [0.0f64; LANES];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc);
+    let mut out = (s[0] + s[1]) + (s[2] + s[3]);
+    for k in n4..a.len() {
+        out += a[k] * b[k];
+    }
+    out
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::aarch64::*;
+    let n4 = a.len() & !(LANES - 1);
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    // lanes 0/1 in acc01, lanes 2/3 in acc23 — same partials as scalar
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    let mut i = 0;
+    while i < n4 {
+        acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+        acc23 = vaddq_f64(acc23, vmulq_f64(vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2))));
+        i += LANES;
+    }
+    let (s0, s1) = (vgetq_lane_f64::<0>(acc01), vgetq_lane_f64::<1>(acc01));
+    let (s2, s3) = (vgetq_lane_f64::<0>(acc23), vgetq_lane_f64::<1>(acc23));
+    let mut out = (s0 + s1) + (s2 + s3);
+    for k in n4..a.len() {
+        out += a[k] * b[k];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// axpy / sub_scaled / div_inplace — elementwise, lanes are distinct outputs
+// ---------------------------------------------------------------------------
+
+/// `y[i] += alpha * x[i]`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { axpy_avx2(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { axpy_neon(alpha, x, y) },
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n4 = y.len() & !(LANES - 1);
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let va = _mm256_set1_pd(alpha);
+    let mut i = 0;
+    while i < n4 {
+        let vy = _mm256_loadu_pd(py.add(i));
+        let vx = _mm256_loadu_pd(px.add(i));
+        _mm256_storeu_pd(py.add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        i += LANES;
+    }
+    for k in n4..y.len() {
+        *py.add(k) += alpha * *px.add(k);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::aarch64::*;
+    let n2 = y.len() & !1;
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let va = vdupq_n_f64(alpha);
+    let mut i = 0;
+    while i < n2 {
+        let vy = vld1q_f64(py.add(i));
+        let vx = vld1q_f64(px.add(i));
+        vst1q_f64(py.add(i), vaddq_f64(vy, vmulq_f64(va, vx)));
+        i += 2;
+    }
+    for k in n2..y.len() {
+        *py.add(k) += alpha * *px.add(k);
+    }
+}
+
+/// `y[i] -= c * x[i]` — the triangular-solve column sweep.
+#[inline]
+pub fn sub_scaled(c: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { sub_scaled_avx2(c, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { sub_scaled_neon(c, x, y) },
+        _ => sub_scaled_scalar(c, x, y),
+    }
+}
+
+fn sub_scaled_scalar(c: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi -= c * xi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sub_scaled_avx2(c: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n4 = y.len() & !(LANES - 1);
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let vc = _mm256_set1_pd(c);
+    let mut i = 0;
+    while i < n4 {
+        let vy = _mm256_loadu_pd(py.add(i));
+        let vx = _mm256_loadu_pd(px.add(i));
+        _mm256_storeu_pd(py.add(i), _mm256_sub_pd(vy, _mm256_mul_pd(vc, vx)));
+        i += LANES;
+    }
+    for k in n4..y.len() {
+        *py.add(k) -= c * *px.add(k);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn sub_scaled_neon(c: f64, x: &[f64], y: &mut [f64]) {
+    use core::arch::aarch64::*;
+    let n2 = y.len() & !1;
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let vc = vdupq_n_f64(c);
+    let mut i = 0;
+    while i < n2 {
+        let vy = vld1q_f64(py.add(i));
+        let vx = vld1q_f64(px.add(i));
+        vst1q_f64(py.add(i), vsubq_f64(vy, vmulq_f64(vc, vx)));
+        i += 2;
+    }
+    for k in n2..y.len() {
+        *py.add(k) -= c * *px.add(k);
+    }
+}
+
+/// `x[i] /= d` — the triangular-solve pivot division.
+#[inline]
+pub fn div_inplace(x: &mut [f64], d: f64) {
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { div_inplace_avx2(x, d) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { div_inplace_neon(x, d) },
+        _ => div_inplace_scalar(x, d),
+    }
+}
+
+fn div_inplace_scalar(x: &mut [f64], d: f64) {
+    for v in x.iter_mut() {
+        *v /= d;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn div_inplace_avx2(x: &mut [f64], d: f64) {
+    use core::arch::x86_64::*;
+    let n4 = x.len() & !(LANES - 1);
+    let px = x.as_mut_ptr();
+    let vd = _mm256_set1_pd(d);
+    let mut i = 0;
+    while i < n4 {
+        _mm256_storeu_pd(px.add(i), _mm256_div_pd(_mm256_loadu_pd(px.add(i)), vd));
+        i += LANES;
+    }
+    for k in n4..x.len() {
+        *px.add(k) /= d;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn div_inplace_neon(x: &mut [f64], d: f64) {
+    use core::arch::aarch64::*;
+    let n2 = x.len() & !1;
+    let px = x.as_mut_ptr();
+    let vd = vdupq_n_f64(d);
+    let mut i = 0;
+    while i < n2 {
+        vst1q_f64(px.add(i), vdivq_f64(vld1q_f64(px.add(i)), vd));
+        i += 2;
+    }
+    for k in n2..x.len() {
+        *px.add(k) /= d;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FFT butterfly
+// ---------------------------------------------------------------------------
+
+/// One radix-2 butterfly sweep over a half-split block: for every k,
+/// `v = hi[k]·w[k]` (complex product formed as `hi_re·w_re − hi_im·w_im`,
+/// `hi_re·w_im + hi_im·w_re` — plain mul/sub/add), then
+/// `lo[k] ← u + v`, `hi[k] ← u − v`.  Lanes are distinct k — bitwise
+/// identical to the scalar loop on every path.
+#[inline]
+pub fn butterfly(
+    re_lo: &mut [f64],
+    im_lo: &mut [f64],
+    re_hi: &mut [f64],
+    im_hi: &mut [f64],
+    w_re: &[f64],
+    w_im: &[f64],
+) {
+    debug_assert!(
+        re_lo.len() == im_lo.len()
+            && re_lo.len() == re_hi.len()
+            && re_lo.len() == im_hi.len()
+            && re_lo.len() == w_re.len()
+            && re_lo.len() == w_im.len()
+    );
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { butterfly_avx2(re_lo, im_lo, re_hi, im_hi, w_re, w_im) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { butterfly_neon(re_lo, im_lo, re_hi, im_hi, w_re, w_im) },
+        _ => butterfly_scalar(re_lo, im_lo, re_hi, im_hi, w_re, w_im),
+    }
+}
+
+fn butterfly_scalar(
+    re_lo: &mut [f64],
+    im_lo: &mut [f64],
+    re_hi: &mut [f64],
+    im_hi: &mut [f64],
+    w_re: &[f64],
+    w_im: &[f64],
+) {
+    for k in 0..re_lo.len() {
+        let (cr, ci) = (w_re[k], w_im[k]);
+        let (ur, ui) = (re_lo[k], im_lo[k]);
+        let vr = re_hi[k] * cr - im_hi[k] * ci;
+        let vi = re_hi[k] * ci + im_hi[k] * cr;
+        re_lo[k] = ur + vr;
+        im_lo[k] = ui + vi;
+        re_hi[k] = ur - vr;
+        im_hi[k] = ui - vi;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn butterfly_avx2(
+    re_lo: &mut [f64],
+    im_lo: &mut [f64],
+    re_hi: &mut [f64],
+    im_hi: &mut [f64],
+    w_re: &[f64],
+    w_im: &[f64],
+) {
+    use core::arch::x86_64::*;
+    let h = re_lo.len();
+    let n4 = h & !(LANES - 1);
+    let (prl, pil) = (re_lo.as_mut_ptr(), im_lo.as_mut_ptr());
+    let (prh, pih) = (re_hi.as_mut_ptr(), im_hi.as_mut_ptr());
+    let (pwr, pwi) = (w_re.as_ptr(), w_im.as_ptr());
+    let mut k = 0;
+    while k < n4 {
+        let cr = _mm256_loadu_pd(pwr.add(k));
+        let ci = _mm256_loadu_pd(pwi.add(k));
+        let ur = _mm256_loadu_pd(prl.add(k));
+        let ui = _mm256_loadu_pd(pil.add(k));
+        let hr = _mm256_loadu_pd(prh.add(k));
+        let hi = _mm256_loadu_pd(pih.add(k));
+        let vr = _mm256_sub_pd(_mm256_mul_pd(hr, cr), _mm256_mul_pd(hi, ci));
+        let vi = _mm256_add_pd(_mm256_mul_pd(hr, ci), _mm256_mul_pd(hi, cr));
+        _mm256_storeu_pd(prl.add(k), _mm256_add_pd(ur, vr));
+        _mm256_storeu_pd(pil.add(k), _mm256_add_pd(ui, vi));
+        _mm256_storeu_pd(prh.add(k), _mm256_sub_pd(ur, vr));
+        _mm256_storeu_pd(pih.add(k), _mm256_sub_pd(ui, vi));
+        k += LANES;
+    }
+    butterfly_scalar(
+        &mut re_lo[n4..],
+        &mut im_lo[n4..],
+        &mut re_hi[n4..],
+        &mut im_hi[n4..],
+        &w_re[n4..],
+        &w_im[n4..],
+    );
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn butterfly_neon(
+    re_lo: &mut [f64],
+    im_lo: &mut [f64],
+    re_hi: &mut [f64],
+    im_hi: &mut [f64],
+    w_re: &[f64],
+    w_im: &[f64],
+) {
+    use core::arch::aarch64::*;
+    let h = re_lo.len();
+    let n2 = h & !1;
+    let (prl, pil) = (re_lo.as_mut_ptr(), im_lo.as_mut_ptr());
+    let (prh, pih) = (re_hi.as_mut_ptr(), im_hi.as_mut_ptr());
+    let (pwr, pwi) = (w_re.as_ptr(), w_im.as_ptr());
+    let mut k = 0;
+    while k < n2 {
+        let cr = vld1q_f64(pwr.add(k));
+        let ci = vld1q_f64(pwi.add(k));
+        let ur = vld1q_f64(prl.add(k));
+        let ui = vld1q_f64(pil.add(k));
+        let hr = vld1q_f64(prh.add(k));
+        let hi = vld1q_f64(pih.add(k));
+        let vr = vsubq_f64(vmulq_f64(hr, cr), vmulq_f64(hi, ci));
+        let vi = vaddq_f64(vmulq_f64(hr, ci), vmulq_f64(hi, cr));
+        vst1q_f64(prl.add(k), vaddq_f64(ur, vr));
+        vst1q_f64(pil.add(k), vaddq_f64(ui, vi));
+        vst1q_f64(prh.add(k), vsubq_f64(ur, vr));
+        vst1q_f64(pih.add(k), vsubq_f64(ui, vi));
+        k += 2;
+    }
+    butterfly_scalar(
+        &mut re_lo[n2..],
+        &mut im_lo[n2..],
+        &mut re_hi[n2..],
+        &mut im_hi[n2..],
+        &w_re[n2..],
+        &w_im[n2..],
+    );
+}
+
+// ---------------------------------------------------------------------------
+// GEMM microkernel
+// ---------------------------------------------------------------------------
+
+/// The 4×8 GEMM register-tile update: for p ascending over kc depth steps,
+/// `acc[i·8+j] += astrip[p·4+i] · bstrip[p·8+j]` — broadcast-A times
+/// B-row outer product, plain mul+add.  The vector forms keep row i's
+/// eight C elements in registers across all of kc; each element still
+/// accumulates strictly k-ascending, so the tile is bitwise equal to the
+/// scalar form (and to `matmul_naive`'s per-element order).
+#[inline]
+pub fn gemm_ukr_4x8(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; 32]) {
+    debug_assert!(astrip.len() >= kc * 4 && bstrip.len() >= kc * 8);
+    match path() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { gemm_ukr_4x8_avx2(astrip, bstrip, kc, acc) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { gemm_ukr_4x8_neon(astrip, bstrip, kc, acc) },
+        _ => gemm_ukr_4x8_scalar(astrip, bstrip, kc, acc),
+    }
+}
+
+fn gemm_ukr_4x8_scalar(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; 32]) {
+    for p in 0..kc {
+        let av = &astrip[p * 4..p * 4 + 4];
+        let bv = &bstrip[p * 8..p * 8 + 8];
+        for i in 0..4 {
+            let ai = av[i];
+            for j in 0..8 {
+                acc[i * 8 + j] += ai * bv[j];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_ukr_4x8_avx2(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; 32]) {
+    use core::arch::x86_64::*;
+    let (pa, pb) = (astrip.as_ptr(), bstrip.as_ptr());
+    let pc = acc.as_mut_ptr();
+    // 8 accumulators: c[2i] holds C[i, 0..4], c[2i+1] holds C[i, 4..8]
+    let mut c = [_mm256_setzero_pd(); 8];
+    for i in 0..8 {
+        c[i] = _mm256_loadu_pd(pc.add(i * 4));
+    }
+    for p in 0..kc {
+        let b0 = _mm256_loadu_pd(pb.add(p * 8));
+        let b1 = _mm256_loadu_pd(pb.add(p * 8 + 4));
+        for i in 0..4 {
+            let ai = _mm256_set1_pd(*pa.add(p * 4 + i));
+            c[2 * i] = _mm256_add_pd(c[2 * i], _mm256_mul_pd(ai, b0));
+            c[2 * i + 1] = _mm256_add_pd(c[2 * i + 1], _mm256_mul_pd(ai, b1));
+        }
+    }
+    for i in 0..8 {
+        _mm256_storeu_pd(pc.add(i * 4), c[i]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gemm_ukr_4x8_neon(astrip: &[f64], bstrip: &[f64], kc: usize, acc: &mut [f64; 32]) {
+    use core::arch::aarch64::*;
+    let (pa, pb) = (astrip.as_ptr(), bstrip.as_ptr());
+    let pc = acc.as_mut_ptr();
+    // 16 two-lane accumulators: c[4i + j] holds C[i, 2j..2j+2]
+    let mut c = [vdupq_n_f64(0.0); 16];
+    for i in 0..16 {
+        c[i] = vld1q_f64(pc.add(i * 2));
+    }
+    for p in 0..kc {
+        let b = [
+            vld1q_f64(pb.add(p * 8)),
+            vld1q_f64(pb.add(p * 8 + 2)),
+            vld1q_f64(pb.add(p * 8 + 4)),
+            vld1q_f64(pb.add(p * 8 + 6)),
+        ];
+        for i in 0..4 {
+            let ai = vdupq_n_f64(*pa.add(p * 4 + i));
+            for (j, &bj) in b.iter().enumerate() {
+                c[4 * i + j] = vaddq_f64(c[4 * i + j], vmulq_f64(ai, bj));
+            }
+        }
+    }
+    for i in 0..16 {
+        vst1q_f64(pc.add(i * 2), c[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// The dispatched primitives must be bitwise equal to the in-module
+    /// scalar forms *whatever* path is active — this is the unit-level
+    /// contract check that needs no global-state flipping (the integration
+    /// suite in tests/parallel.rs additionally toggles `set_enabled`).
+    #[test]
+    fn dispatched_primitives_match_scalar_bitwise() {
+        let mut rng = Rng::new(91);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 100, 257] {
+            let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "dot len={len}");
+
+            let y0: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let (mut y1, mut y2) = (y0.clone(), y0.clone());
+            axpy(0.37, &a, &mut y1);
+            axpy_scalar(0.37, &a, &mut y2);
+            assert!(bits_eq(&y1, &y2), "axpy len={len}");
+
+            let (mut y1, mut y2) = (y0.clone(), y0.clone());
+            sub_scaled(-1.93, &a, &mut y1);
+            sub_scaled_scalar(-1.93, &a, &mut y2);
+            assert!(bits_eq(&y1, &y2), "sub_scaled len={len}");
+
+            let (mut y1, mut y2) = (y0.clone(), y0.clone());
+            div_inplace(&mut y1, 0.731);
+            div_inplace_scalar(&mut y2, 0.731);
+            assert!(bits_eq(&y1, &y2), "div_inplace len={len}");
+        }
+    }
+
+    #[test]
+    fn butterfly_matches_scalar_bitwise() {
+        let mut rng = Rng::new(92);
+        for h in [1usize, 2, 3, 4, 5, 8, 13, 64] {
+            let mk = |rng: &mut Rng| -> Vec<f64> { (0..h).map(|_| rng.normal()).collect() };
+            let (rl0, il0, rh0, ih0) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+            let wr: Vec<f64> = (0..h).map(|k| (k as f64 * 0.3).cos()).collect();
+            let wi: Vec<f64> = (0..h).map(|k| -(k as f64 * 0.3).sin()).collect();
+            let (mut rl1, mut il1, mut rh1, mut ih1) =
+                (rl0.clone(), il0.clone(), rh0.clone(), ih0.clone());
+            butterfly(&mut rl1, &mut il1, &mut rh1, &mut ih1, &wr, &wi);
+            let (mut rl2, mut il2, mut rh2, mut ih2) = (rl0, il0, rh0, ih0);
+            butterfly_scalar(&mut rl2, &mut il2, &mut rh2, &mut ih2, &wr, &wi);
+            assert!(
+                bits_eq(&rl1, &rl2) && bits_eq(&il1, &il2) && bits_eq(&rh1, &rh2)
+                    && bits_eq(&ih1, &ih2),
+                "butterfly h={h}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_microkernel_matches_scalar_bitwise() {
+        let mut rng = Rng::new(93);
+        for kc in [0usize, 1, 2, 3, 7, 16, 100] {
+            let astrip: Vec<f64> = (0..kc * 4).map(|_| rng.normal()).collect();
+            let bstrip: Vec<f64> = (0..kc * 8).map(|_| rng.normal()).collect();
+            let mut acc0 = [0.0f64; 32];
+            for (i, v) in acc0.iter_mut().enumerate() {
+                *v = (i as f64 * 0.11).sin();
+            }
+            let (mut acc1, mut acc2) = (acc0, acc0);
+            gemm_ukr_4x8(&astrip, &bstrip, kc, &mut acc1);
+            gemm_ukr_4x8_scalar(&astrip, &bstrip, kc, &mut acc2);
+            assert!(bits_eq(&acc1, &acc2), "microkernel kc={kc}");
+        }
+    }
+
+    #[test]
+    fn set_enabled_forces_scalar_and_reports_gauge() {
+        // other tests in this binary are path-agnostic (the contract makes
+        // every path bitwise identical), so flipping the global here is safe
+        set_enabled(false);
+        assert_eq!(path(), SimdPath::Scalar);
+        let snap = crate::telemetry::snapshot();
+        let g = snap
+            .gauges
+            .iter()
+            .find(|(n, _, _)| n == "simd.path")
+            .expect("simd.path gauge registered");
+        assert_eq!(g.1, SimdPath::Scalar as u64);
+        set_enabled(true);
+        let p = path();
+        assert!(p == SimdPath::Scalar || p == SimdPath::Avx2 || p == SimdPath::Neon);
+        assert!(!p.as_str().is_empty());
+    }
+
+    fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+}

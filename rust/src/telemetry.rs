@@ -300,6 +300,12 @@ impl HistSnapshot {
 
     /// Bucket-midpoint percentile estimate in microseconds, clamped to the
     /// observed [min, max] range.  Zero-count-safe: returns 0.0 when empty.
+    ///
+    /// Rank selection is the standard nearest-rank (ceil) convention —
+    /// the bucket containing sample ⌈p/100 · count⌉ — deliberately the
+    /// same convention as `metrics::Timings::percentile_us`, so exact and
+    /// bucketed percentiles over one stream agree on *which* sample is the
+    /// p50 and differ only by bucket quantization.
     pub fn percentile_us(&self, p: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -615,6 +621,23 @@ mod tests {
         assert!(p50 >= 1.0 && p99 <= 1000.0);
         // p50 of uniform 1..1000 lands in the [256,512) bucket
         assert!((256.0..512.0).contains(&p50), "p50={p50}");
+    }
+
+    /// Exact nearest-rank pins (ISSUE 9 satellite: keep telemetry's
+    /// convention locked to metrics::Timings).  Two samples, 3us and
+    /// 100us: bucket midpoints are (2+4)/2 = 3.0 and (64+128)/2 = 96.0.
+    /// p50 → rank ⌈0.5·2⌉ = 1 → first sample's bucket; anything past 50%
+    /// → rank 2 → second bucket.  The old `.round()` convention would
+    /// have put p50 in the second bucket.
+    #[test]
+    fn hist_percentile_uses_nearest_rank_ceil() {
+        let mut h = HistSnapshot::default();
+        h.record_us(3);
+        h.record_us(100);
+        assert_eq!(h.percentile_us(50.0), 3.0);
+        assert_eq!(h.percentile_us(51.0), 96.0);
+        assert_eq!(h.percentile_us(99.0), 96.0);
+        assert_eq!(h.percentile_us(0.0), 3.0); // rank clamps to 1
     }
 
     #[test]

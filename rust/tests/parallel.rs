@@ -10,15 +10,24 @@
 //! count); ci.sh additionally runs the structured and telemetry suites under
 //! `WISKI_THREADS=4` to exercise the env-parsing path for real.
 
+//! With ISSUE 9 the same contract extends to SIMD dispatch: the AVX2/NEON
+//! kernels map lanes to distinct output elements with the scalar operation
+//! order per element (no FMA), so forced-scalar and auto-dispatched runs
+//! are also the same program.  The suite below crosses {forced-scalar,
+//! auto} × threads {1, 8} on dot/axpy/FFT/GEMM at odd shapes and on the
+//! full 30-point stream; ci.sh runs this whole file twice, once under
+//! `WISKI_SIMD=0`, so both sides execute for real on every arch.
+
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use wiski::backend::{Executor, NativeBackend};
 use wiski::gp::ski::Lattice;
 use wiski::kernels::Kernel;
-use wiski::linalg::{KroneckerToeplitz, Mat};
+use wiski::linalg::{fft_inplace, ifft_inplace, KroneckerToeplitz, Mat};
 use wiski::par;
 use wiski::rng::Rng;
 use wiski::runtime::Tensor;
+use wiski::simd;
 
 /// Tests in this file mutate the process-wide thread override; serialize
 /// them and always restore the default (0 = env/auto) on the way out.
@@ -144,6 +153,124 @@ fn run_stream() -> Vec<Tensor> {
     pins.push(Tensor::new(vec![256, 2], xs));
     collected.extend(be.exec(&pred, &pins).unwrap());
     collected
+}
+
+/// Run `f` with SIMD dispatch forced off or restored to auto-detection,
+/// re-enabling auto on the way out (under `WISKI_SIMD=0` "auto" is still
+/// scalar — the env pin wins over `set_enabled(true)` by design, and ci.sh
+/// uses exactly that to run this suite all-scalar).  Callers hold [`lock`]:
+/// the dispatch path is process-global state just like the thread override.
+fn with_simd<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    simd::set_enabled(on);
+    let out = f();
+    simd::set_enabled(true);
+    out
+}
+
+const VEC_LENS: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 15, 16, 17, 31, 100, 1001];
+
+/// ISSUE 9 tentpole: `simd::dot` and `simd::axpy` are bitwise identical on
+/// the forced-scalar and auto-dispatched paths at every remainder class
+/// (lengths cross the 4-lane width, the NEON 2-lane sub-width, and a long
+/// tail-heavy 1001).
+#[test]
+fn simd_dot_axpy_bitwise_match_scalar_at_odd_lengths() {
+    let _g = lock();
+    let mut rng = Rng::new(91);
+    for &n in VEC_LENS {
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let alpha = rng.normal();
+        let d_scalar = with_simd(false, || simd::dot(&a, &b));
+        let d_auto = with_simd(true, || simd::dot(&a, &b));
+        assert_eq!(d_scalar.to_bits(), d_auto.to_bits(), "dot diverged at n={n}");
+        let mut y_scalar = b.clone();
+        with_simd(false, || simd::axpy(alpha, &a, &mut y_scalar));
+        let mut y_auto = b.clone();
+        with_simd(true, || simd::axpy(alpha, &a, &mut y_auto));
+        for i in 0..n {
+            assert_eq!(
+                y_scalar[i].to_bits(),
+                y_auto[i].to_bits(),
+                "axpy diverged at n={n} i={i}"
+            );
+        }
+    }
+}
+
+/// Forward and inverse FFTs must be bitwise identical under forced-scalar
+/// and auto dispatch at every power-of-two length that exercises the
+/// butterfly's vector body and its h < lane-width scalar tail.
+#[test]
+fn simd_fft_bitwise_matches_scalar() {
+    let _g = lock();
+    let mut rng = Rng::new(92);
+    for &n in &[2usize, 4, 8, 64, 256, 2048] {
+        let re0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let im0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let run = |on: bool| {
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            with_simd(on, || {
+                fft_inplace(&mut re, &mut im);
+                ifft_inplace(&mut re, &mut im);
+            });
+            (re, im)
+        };
+        let (re_s, im_s) = run(false);
+        let (re_a, im_a) = run(true);
+        for i in 0..n {
+            assert_eq!(re_s[i].to_bits(), re_a[i].to_bits(), "fft re diverged n={n} i={i}");
+            assert_eq!(im_s[i].to_bits(), im_a[i].to_bits(), "fft im diverged n={n} i={i}");
+        }
+    }
+}
+
+/// The blocked GEMM must agree bitwise with `matmul_naive` on BOTH
+/// dispatch paths — the no-FMA microkernel contract — at odd shapes and
+/// 1/8 worker threads.  Three-way comparison: naive is the oracle, so a
+/// scalar-vs-SIMD agreement on a wrong answer cannot slip through.
+#[test]
+fn simd_gemm_bitwise_matches_naive_on_both_paths() {
+    let _g = lock();
+    let mut rng = Rng::new(93);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 9, 8), (37, 41, 43), (65, 130, 19)] {
+        let a = random_mat(m, k, &mut rng);
+        let b = random_mat(k, n, &mut rng);
+        let oracle = a.matmul_naive(&b);
+        for threads in [1usize, 8] {
+            par::set_threads(threads);
+            for on in [false, true] {
+                let fast = with_simd(on, || a.matmul_blocked(&b));
+                assert_eq!(
+                    fast.data, oracle.data,
+                    "blocked GEMM diverged from naive at ({m},{k},{n}) \
+                     threads={threads} simd={on}"
+                );
+            }
+        }
+    }
+    par::set_threads(0);
+}
+
+/// End-to-end: forced-scalar at 1 thread versus auto-dispatch at 8
+/// threads, across a full 30-point WISKI stream + 256-query predict.
+/// Every f32 the backend emits must carry the same bit pattern — SIMD and
+/// the worker pool together change nothing but wall-clock.
+#[test]
+fn stream_outputs_are_bitwise_identical_across_simd_and_threads() {
+    let _g = lock();
+    par::set_threads(1);
+    let scalar_serial = with_simd(false, run_stream);
+    par::set_threads(8);
+    let simd_parallel = with_simd(true, run_stream);
+    par::set_threads(0);
+    assert_eq!(scalar_serial.len(), simd_parallel.len(), "output tensor counts differ");
+    for (i, (a, b)) in scalar_serial.iter().zip(&simd_parallel).enumerate() {
+        assert_eq!(a.shape, b.shape, "tensor {i} shape differs");
+        let bits_a: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "tensor {i} is not bitwise identical");
+    }
 }
 
 /// ISSUE satellite: `WISKI_THREADS=1` and `WISKI_THREADS=8` must produce
