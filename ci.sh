@@ -22,7 +22,7 @@ echo "== telemetry smoke: serve with WISKI_TRACE=json =="
 # as JSON and contain every span/counter family the telemetry layer wires
 # through the stack (executor decorator, QSystem phases, QCache, server).
 trace_tmp=$(mktemp)
-trap 'rm -f "$trace_tmp"' EXIT
+trap 'rm -f "$trace_tmp"; rm -rf "${ckpt_base:-/nonexistent-wiski-ckpt}"' EXIT
 WISKI_TRACE=json ./target/release/wiski serve --stream 64 >/dev/null 2> "$trace_tmp"
 if ! [ -s "$trace_tmp" ]; then
     echo "ci.sh: WISKI_TRACE=json serve emitted no telemetry" >&2
@@ -66,6 +66,15 @@ echo "== structured + telemetry + gradcheck suites under WISKI_THREADS=4 =="
 # at any thread count.
 WISKI_THREADS=4 cargo test -q --test structured --test telemetry --test osvgp_grad
 
+echo "== durability suites: persist + linalg oracles, threads=4 then forced scalar =="
+# The persist suite's recovery-parity tests sweep thread counts and SIMD
+# modes internally, but run the whole file under both environment pins too
+# so the env-variable paths (WISKI_THREADS parsing, WISKI_SIMD=0 override)
+# carry the durability contract as well, alongside the cg/lanczos oracle
+# suite the recovery math sits on.
+WISKI_THREADS=4 cargo test -q --test persist --test linalg_iter
+WISKI_SIMD=0 cargo test -q --test persist
+
 echo "== SIMD determinism: structured + parallel suites, forced scalar then auto =="
 # The dense kernels dispatch to AVX2/NEON at runtime under a bitwise-
 # determinism contract (no FMA, lanes are distinct outputs).  Run the
@@ -76,10 +85,58 @@ echo "== SIMD determinism: structured + parallel suites, forced scalar then auto
 WISKI_SIMD=0 cargo test -q --test structured --test parallel
 cargo test -q --test parallel
 
+echo "== durability: kill-and-recover bitwise gate =="
+# The headline guarantee of the persist subsystem: a run that is killed
+# mid-stream (abort(), no final snapshot) and then resumed must finish with
+# the *bitwise-identical* posterior of an uninterrupted run.  serve pins
+# micro-batches to 1 under --checkpoint-dir, so the comparison is exact.
+ckpt_base=$(mktemp -d)
+./target/release/wiski serve --stream 96 --checkpoint-dir "$ckpt_base/ref" \
+    --checkpoint-every 16 > "$ckpt_base/ref.out"
+ref_bits=$(grep '^posterior-bits:' "$ckpt_base/ref.out")
+if [ -z "$ref_bits" ]; then
+    echo "ci.sh: reference durable run printed no posterior-bits line" >&2
+    exit 1
+fi
+# crash mid-stream: --crash-after aborts by design, so a zero exit is a bug
+if ./target/release/wiski serve --stream 96 --checkpoint-dir "$ckpt_base/crash" \
+    --checkpoint-every 16 --crash-after 41 > /dev/null 2> "$ckpt_base/crash.err"; then
+    echo "ci.sh: --crash-after run exited zero (expected abort)" >&2
+    exit 1
+fi
+if ! grep -q 'crash-after 41: aborting' "$ckpt_base/crash.err"; then
+    echo "ci.sh: crash run failed before the crash point:" >&2
+    cat "$ckpt_base/crash.err" >&2
+    exit 1
+fi
+WISKI_TRACE=json ./target/release/wiski serve --stream 96 \
+    --checkpoint-dir "$ckpt_base/crash" --checkpoint-every 16 --resume \
+    > "$ckpt_base/resume.out" 2> "$ckpt_base/resume.trace"
+if ! grep -q -- '-> 41 observations' "$ckpt_base/resume.out"; then
+    echo "ci.sh: resume did not recover all 41 durable observations:" >&2
+    grep '^recovered:' "$ckpt_base/resume.out" >&2 || true
+    exit 1
+fi
+resume_bits=$(grep '^posterior-bits:' "$ckpt_base/resume.out")
+if [ "$ref_bits" != "$resume_bits" ]; then
+    echo "ci.sh: crash+resume posterior diverged from the uninterrupted run" >&2
+    echo "  reference: $ref_bits" >&2
+    echo "  resumed:   $resume_bits" >&2
+    exit 1
+fi
+for name in persist.recover persist.wal_append persist.snapshot; do
+    if ! grep -qF "$name" "$ckpt_base/resume.trace"; then
+        echo "ci.sh: resume telemetry missing '$name'" >&2
+        exit 1
+    fi
+done
+rm -rf "$ckpt_base"
+echo "kill-and-recover: posterior bits identical across crash+resume"
+
 echo "== cargo bench -- --list =="
 bench_list=$(cargo bench -- --list)
 printf '%s\n' "$bench_list"
-for bench_name in wiski_kuu perf gemm osvgp simd; do
+for bench_name in wiski_kuu perf gemm osvgp simd persist; do
     if ! printf '%s\n' "$bench_list" | grep -q "$bench_name"; then
         echo "ci.sh: bench section '$bench_name' missing from --list output" >&2
         exit 1

@@ -1,8 +1,9 @@
 //! Threaded model server: request router + observation micro-batcher.
 
 use std::collections::VecDeque;
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -10,7 +11,16 @@ use anyhow::Result;
 
 use crate::gp::{OnlineGp, Prediction};
 use crate::metrics::RunningStats;
+use crate::persist::{CheckpointPolicy, DurableModel, Persistable, RecoveryReport};
 use crate::telemetry::{self, HistSnapshot};
+
+/// Lock the shared stats, tolerating poison: if the worker thread panicked
+/// while holding the lock, the stats are still readable (counters are
+/// monotonic, worst case one in-flight update is half-applied) and callers
+/// like `stats()` / `Drop` must not turn one panic into a second one.
+fn lock_stats(stats: &Mutex<ServerStats>) -> MutexGuard<'_, ServerStats> {
+    stats.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Client -> server messages.
 pub enum Request {
@@ -153,7 +163,7 @@ impl ModelHandle {
     }
 
     pub fn stats(&self) -> ServerStats {
-        self.stats.lock().unwrap().clone()
+        lock_stats(&self.stats).clone()
     }
 }
 
@@ -196,7 +206,7 @@ impl ModelServer {
                     return;
                 }
                 telemetry::gauge("server.queue_depth").set(depth);
-                let mut st = stats_worker.lock().unwrap();
+                let mut st = lock_stats(&stats_worker);
                 st.max_queue_depth = st.max_queue_depth.max(depth);
             };
             // Applies one micro-batch (at most `batch_q` observations off
@@ -222,7 +232,7 @@ impl ModelServer {
                 let result = model.observe_batch(&xs, &ys);
                 let dt_us = t0.elapsed().as_micros() as u64;
                 drop(span);
-                let mut st = stats_worker.lock().unwrap();
+                let mut st = lock_stats(&stats_worker);
                 match result {
                     Ok(()) => {
                         st.observed += take as u64;
@@ -282,9 +292,10 @@ impl ModelServer {
                 };
                 let dt_us = t0.elapsed().as_micros() as u64;
                 drop(span);
-                let mut st = stats.lock().unwrap();
+                let mut st = lock_stats(stats);
                 st.predicts += 1;
                 st.predict_latency.record_us(dt_us);
+                drop(st);
                 let _ = reply.send(resp);
                 true
             }
@@ -293,12 +304,12 @@ impl ModelServer {
                     Ok(()) => Response::Done,
                     Err(e) => Response::Error(format!("{e:#}")),
                 };
-                stats.lock().unwrap().refits += 1;
+                lock_stats(stats).refits += 1;
                 let _ = reply.send(resp);
                 true
             }
             Request::Flush { reply } => {
-                let _ = reply.send(Response::Stats(stats.lock().unwrap().clone()));
+                let _ = reply.send(Response::Stats(lock_stats(stats).clone()));
                 true
             }
             Request::Observe { .. } => unreachable!("handled by router"),
@@ -306,24 +317,49 @@ impl ModelServer {
         }
     }
 
+    /// Spawn a server whose model is wrapped in a [`DurableModel`]: every
+    /// observation batch is WAL-logged before it is applied and the state
+    /// snapshotted per `policy`.  Returns the recovery report so callers
+    /// can see what a resume restored.
+    pub fn spawn_durable<M: OnlineGp + Persistable + Send + 'static>(
+        model: M,
+        batch_q: usize,
+        dir: impl AsRef<Path>,
+        policy: CheckpointPolicy,
+        resume: bool,
+    ) -> Result<(Self, RecoveryReport)> {
+        let (durable, report) = DurableModel::open(model, dir, policy, resume)?;
+        Ok((Self::spawn(durable, batch_q), report))
+    }
+
     pub fn handle(&self) -> ModelHandle {
         self.handle.clone()
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop the worker: idempotent (second call is a no-op) and panic-safe
+    /// (a worker that died panicking is joined, recorded, and never joined
+    /// twice).  Shared by [`shutdown`] and `Drop` so `shutdown` followed by
+    /// the implicit drop cannot double-join or hang.
+    fn stop(&mut self) {
+        let Some(j) = self.join.take() else { return };
+        // if the worker already died the channel send fails, which is fine —
+        // join below still reaps the thread
         let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        if j.join().is_err() {
+            telemetry::count("server.worker_panics", 1);
+            let mut st = lock_stats(&self.handle.stats);
+            st.last_error = Some("model worker thread panicked".into());
         }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for ModelServer {
     fn drop(&mut self) {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.stop();
     }
 }
 
@@ -473,6 +509,70 @@ mod tests {
             stats.max_queue_depth
         );
         server.shutdown();
+    }
+
+    /// A model that panics (not errors) on observe: the worker thread dies.
+    /// The handle and the server itself must degrade to clean errors —
+    /// never a hang, never a second panic from a poisoned lock.
+    struct PanickingModel;
+
+    impl OnlineGp for PanickingModel {
+        fn name(&self) -> &str {
+            "panicking"
+        }
+
+        fn num_observed(&self) -> usize {
+            0
+        }
+
+        fn observe(&mut self, _x: &[f64], _y: f64) -> Result<()> {
+            panic!("synthetic model panic")
+        }
+
+        fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+            Ok(vec![Prediction::default(); xs.len()])
+        }
+    }
+
+    #[test]
+    fn worker_panic_degrades_to_errors_not_hangs() {
+        let server = ModelServer::spawn(PanickingModel, 4);
+        let h = server.handle();
+        h.observe(vec![0.0], 0.0).unwrap();
+        // the worker dies applying that observation; subsequent calls must
+        // return errors (channel closed), not block forever
+        let mut flushed_err = false;
+        for _ in 0..50 {
+            match h.flush() {
+                Err(_) => {
+                    flushed_err = true;
+                    break;
+                }
+                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        assert!(flushed_err, "flush against a dead worker must error, not succeed forever");
+        // stats() must not panic even though the worker died
+        let _ = h.stats();
+        // shutdown joins the panicked thread and records it; the implicit
+        // Drop after shutdown must be a no-op (no double join, no hang)
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_then_drop_is_idempotent() {
+        let gp = ExactGp::new(Kernel::Rbf { dim: 1 }, SolveMethod::Cholesky, 0.05, 0);
+        let server = ModelServer::spawn(gp, 4);
+        let h = server.handle();
+        h.observe(vec![0.1], 0.2).unwrap();
+        let _ = h.flush();
+        // shutdown consumes self; its body runs stop() and then Drop runs
+        // stop() again on the same instance — the take() guard makes the
+        // second call a no-op rather than a double-join
+        server.shutdown();
+        // the handle now reports a dead server as an error
+        assert!(h.observe(vec![0.0], 0.0).is_err());
+        assert!(h.predict(vec![vec![0.0]]).is_err());
     }
 
     #[test]

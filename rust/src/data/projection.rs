@@ -40,6 +40,21 @@ impl Projection {
         Self { w, in_dim, out_dim }
     }
 
+    /// The projection rows (k rows of length d) for checkpointing.
+    pub fn rows(&self) -> &[Vec<f64>] {
+        &self.w
+    }
+
+    /// Rebuild a projection from checkpointed rows.  `None` when the rows
+    /// are ragged (corrupt snapshot) — the caller turns that into an error.
+    pub fn from_rows(w: Vec<Vec<f64>>, in_dim: usize) -> Option<Self> {
+        if w.is_empty() || w.iter().any(|r| r.len() != in_dim) {
+            return None;
+        }
+        let out_dim = w.len();
+        Some(Self { w, in_dim, out_dim })
+    }
+
     pub fn is_identity(&self) -> bool {
         self.in_dim == self.out_dim
             && self

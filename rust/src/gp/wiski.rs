@@ -19,6 +19,8 @@ use crate::data::Projection;
 use crate::gp::{OnlineGp, Prediction};
 use crate::kernels::Kernel;
 use crate::optim::Adam;
+use crate::persist::codec::{Reader, Writer};
+use crate::persist::{Persistable, Section, Snapshot};
 use crate::runtime::Tensor;
 
 /// Configuration selecting an artifact variant.
@@ -294,6 +296,162 @@ impl Wiski {
 
     pub fn noise_var(&self) -> f64 {
         self.kernel.noise_var(&self.theta)
+    }
+}
+
+impl Persistable for Wiski {
+    fn persist_kind(&self) -> &'static str {
+        "wiski"
+    }
+
+    fn save_sections(&self) -> Vec<Section> {
+        // wiski.config — structural identity; restore refuses a snapshot
+        // whose artifact variant differs from the live model's.
+        let mut cfg = Writer::new();
+        cfg.put_str(&self.cfg.kind);
+        cfg.put_u32(self.cfg.g as u32);
+        cfg.put_u32(self.cfg.d as u32);
+        cfg.put_u32(self.cfg.r as u32);
+        cfg.put_f64(self.cfg.lr);
+        cfg.put_u32(self.cfg.grad_steps as u32);
+        cfg.put_u8(self.cfg.learn_noise as u8);
+        cfg.put_u32(self.step_q as u32);
+        cfg.put_u32(self.predict_b as u32);
+
+        let mut proj = Writer::new();
+        proj.put_u32(self.projection.in_dim as u32);
+        proj.put_u32(self.projection.out_dim as u32);
+        for row in self.projection.rows() {
+            proj.put_f64_slice(row);
+        }
+
+        let mut theta = Writer::new();
+        theta.put_f64_slice(&self.theta);
+        theta.put_f64(self.last_mll);
+        theta.put_u64(self.n_observed as u64);
+        theta.put_u8(self.grad_enabled as u8);
+
+        let mut adam = Writer::new();
+        let (t, m, v) = self.adam.state();
+        adam.put_u64(t);
+        adam.put_f64_slice(m);
+        adam.put_f64_slice(v);
+
+        let mut caches = Writer::new();
+        caches.put_u32(self.caches.len() as u32);
+        for c in &self.caches {
+            caches.put_u32(c.shape.len() as u32);
+            for &dim in &c.shape {
+                caches.put_u64(dim as u64);
+            }
+            caches.put_f32_slice(&c.data);
+        }
+
+        vec![
+            Section::new("wiski.config", cfg.into_bytes()),
+            Section::new("wiski.projection", proj.into_bytes()),
+            Section::new("wiski.theta", theta.into_bytes()),
+            Section::new("wiski.adam", adam.into_bytes()),
+            Section::new("wiski.caches", caches.into_bytes()),
+        ]
+    }
+
+    fn restore_sections(&mut self, snap: &Snapshot) -> Result<()> {
+        let mut r = Reader::new(snap.require("wiski.config")?);
+        let kind = r.str()?;
+        let g = r.u32()? as usize;
+        let d = r.u32()? as usize;
+        let rr = r.u32()? as usize;
+        if kind != self.cfg.kind || g != self.cfg.g || d != self.cfg.d || rr != self.cfg.r {
+            bail!(
+                "snapshot variant {kind}/g{g}/d{d}/r{rr} does not match model {}/g{}/d{}/r{}",
+                self.cfg.kind, self.cfg.g, self.cfg.d, self.cfg.r
+            );
+        }
+        let lr = r.f64()?;
+        let grad_steps = r.u32()? as usize;
+        let learn_noise = r.u8()? != 0;
+        let step_q = r.u32()? as usize;
+        if step_q != self.step_q {
+            // a different step batch changes chunk boundaries, which changes
+            // the math — replay would not be bitwise-faithful
+            bail!("snapshot step batch q{step_q} does not match model q{}", self.step_q);
+        }
+        let _predict_b = r.u32()?;
+
+        let mut r = Reader::new(snap.require("wiski.projection")?);
+        let in_dim = r.u32()? as usize;
+        let out_dim = r.u32()? as usize;
+        if out_dim != self.cfg.d || in_dim == 0 || in_dim > 1 << 20 {
+            bail!("snapshot projection {in_dim}->{out_dim} incompatible with d={}", self.cfg.d);
+        }
+        let mut rows = Vec::with_capacity(out_dim);
+        for _ in 0..out_dim {
+            rows.push(r.f64_slice(in_dim)?);
+        }
+        let projection = Projection::from_rows(rows, in_dim)
+            .ok_or_else(|| anyhow::anyhow!("snapshot projection rows are ragged"))?;
+
+        let mut r = Reader::new(snap.require("wiski.theta")?);
+        let theta = r.f64_slice(self.theta.len())?;
+        if theta.len() != self.theta.len() {
+            bail!("snapshot theta length {} != model {}", theta.len(), self.theta.len());
+        }
+        let last_mll = r.f64()?;
+        let n_observed = r.u64()? as usize;
+        let grad_enabled = r.u8()? != 0;
+
+        let mut r = Reader::new(snap.require("wiski.adam")?);
+        let t = r.u64()?;
+        let m = r.f64_slice(theta.len())?;
+        let v = r.f64_slice(theta.len())?;
+        if m.len() != theta.len() || v.len() != theta.len() {
+            bail!("snapshot adam moments length mismatch");
+        }
+
+        let mut r = Reader::new(snap.require("wiski.caches")?);
+        let count = r.u32()? as usize;
+        if count != self.caches.len() {
+            bail!("snapshot has {count} caches, model expects {}", self.caches.len());
+        }
+        let mut caches = Vec::with_capacity(count);
+        for cur in &self.caches {
+            let ndim = r.u32()? as usize;
+            if ndim != cur.shape.len() {
+                bail!("snapshot cache rank {ndim} != expected {}", cur.shape.len());
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u64()? as usize);
+            }
+            if shape != cur.shape {
+                bail!("snapshot cache shape {shape:?} != expected {:?}", cur.shape);
+            }
+            let data = r.f32_slice(cur.data.len())?;
+            if data.len() != cur.data.len() {
+                bail!("snapshot cache has {} elements, expected {}", data.len(), cur.data.len());
+            }
+            caches.push(Tensor::new(shape, data));
+        }
+
+        // all sections decoded and validated — apply atomically
+        self.cfg.lr = lr;
+        self.cfg.grad_steps = grad_steps;
+        self.cfg.learn_noise = learn_noise;
+        self.projection = projection;
+        self.theta = theta;
+        self.last_mll = last_mll;
+        self.n_observed = n_observed;
+        self.grad_enabled = grad_enabled;
+        let mut adam = Adam::new(self.theta.len(), lr);
+        adam.restore_state(t, m, v);
+        self.adam = adam;
+        self.caches = caches;
+        Ok(())
+    }
+
+    fn replay_record(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &[f64]) -> Result<()> {
+        self.observe_weighted(xs, ys, ws)
     }
 }
 

@@ -34,6 +34,10 @@
 //!   FFT butterfly, dot/axpy, triangular-solve sweeps) under the same
 //!   bitwise-determinism contract — no FMA, lanes are distinct outputs;
 //!   `WISKI_SIMD=0` / `--no-simd` force the scalar fallback.
+//! - [`persist`]: durable state — versioned per-section-checksummed
+//!   snapshots + write-ahead observation log with segment rotation and
+//!   compaction; recovery (snapshot + WAL-tail replay) reproduces the
+//!   uninterrupted run bitwise (`serve --checkpoint-dir DIR --resume`).
 //! - [`bo`] / [`active`]: Bayesian-optimization and active-learning loops
 //!   (the paper's §5.3 / §5.4 applications).
 //! - [`linalg`], [`kernels`], [`data`], [`rng`], [`metrics`], [`optim`]:
@@ -68,6 +72,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod optim;
 pub mod par;
+pub mod persist;
 pub mod rng;
 pub mod runtime;
 pub mod simd;

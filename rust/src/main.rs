@@ -22,6 +22,7 @@ use wiski::coordinator::ModelServer;
 use wiski::data::Projection;
 use wiski::gp::{Wiski, WiskiConfig};
 use wiski::kernels::inv_softplus;
+use wiski::persist::CheckpointPolicy;
 use wiski::rng::Rng;
 use wiski::runtime::Tensor;
 use wiski::telemetry::{self, TraceMode};
@@ -37,6 +38,14 @@ flags:
                            (default: WISKI_THREADS or all cores)
   --no-simd                force the scalar kernels (disable AVX2/NEON
                            dispatch; output is bitwise identical either way)
+  --checkpoint-dir DIR     (serve) durable state: WAL every observation and
+                           snapshot periodically into DIR
+  --resume                 (serve) recover existing state in the checkpoint
+                           dir and continue the stream where it left off
+  --checkpoint-every K     (serve) snapshot every K observation records
+                           (default 64; requires --checkpoint-dir)
+  --crash-after N          (serve) testing hook: abort() after N durable
+                           observations, skipping the final snapshot
   -h, --help               print this help
 environment:
   WISKI_TRACE=off|pretty|json   telemetry emission (default off)
@@ -52,6 +61,10 @@ struct Cli {
     stream: Option<usize>,
     threads: Option<usize>,
     no_simd: bool,
+    checkpoint_dir: Option<String>,
+    resume: bool,
+    checkpoint_every: Option<u64>,
+    crash_after: Option<usize>,
 }
 
 fn die(msg: &str) -> ! {
@@ -70,6 +83,10 @@ fn parse_cli(args: &[String]) -> Result<Cli, String> {
         stream: None,
         threads: None,
         no_simd: false,
+        checkpoint_dir: None,
+        resume: false,
+        checkpoint_every: None,
+        crash_after: None,
     };
     let mut it = args.iter().skip(1);
     while let Some(a) = it.next() {
@@ -99,6 +116,23 @@ fn parse_cli(args: &[String]) -> Result<Cli, String> {
                 }
             }
             "--no-simd" => cli.no_simd = true,
+            "--checkpoint-dir" => match it.next() {
+                Some(v) => cli.checkpoint_dir = Some(v.clone()),
+                None => return Err("--checkpoint-dir requires a directory".into()),
+            },
+            "--resume" => cli.resume = true,
+            "--checkpoint-every" => {
+                match it.next().and_then(|v| v.parse::<u64>().ok()).filter(|&n| n >= 1) {
+                    Some(n) => cli.checkpoint_every = Some(n),
+                    None => return Err("--checkpoint-every requires a positive integer".into()),
+                }
+            }
+            "--crash-after" => {
+                match it.next().and_then(|v| v.parse::<usize>().ok()).filter(|&n| n >= 1) {
+                    Some(n) => cli.crash_after = Some(n),
+                    None => return Err("--crash-after requires a positive integer".into()),
+                }
+            }
             flag if flag.starts_with('-') => return Err(format!("unknown flag {flag:?}")),
             cmd if cli.cmd.is_empty() => match cmd {
                 "info" | "serve" | "check" => cli.cmd = cmd.to_string(),
@@ -114,6 +148,20 @@ fn parse_cli(args: &[String]) -> Result<Cli, String> {
     }
     if cli.stream.is_some() && cli.cmd != "serve" {
         return Err("--stream only applies to the serve command".into());
+    }
+    if cli.checkpoint_dir.is_some() && cli.cmd != "serve" {
+        return Err("--checkpoint-dir only applies to the serve command".into());
+    }
+    if cli.checkpoint_dir.is_none() {
+        if cli.resume {
+            return Err("--resume requires --checkpoint-dir".into());
+        }
+        if cli.checkpoint_every.is_some() {
+            return Err("--checkpoint-every requires --checkpoint-dir".into());
+        }
+        if cli.crash_after.is_some() {
+            return Err("--crash-after requires --checkpoint-dir".into());
+        }
     }
     Ok(cli)
 }
@@ -133,7 +181,17 @@ fn main() -> Result<()> {
     };
     let result = match cli.cmd.as_str() {
         "info" => info(&rt),
-        "serve" => serve(rt, cli.stream.unwrap_or(1000)),
+        "serve" => match &cli.checkpoint_dir {
+            Some(dir) => serve_durable(
+                rt,
+                cli.stream.unwrap_or(1000),
+                dir,
+                cli.resume,
+                cli.checkpoint_every,
+                cli.crash_after,
+            ),
+            None => serve(rt, cli.stream.unwrap_or(1000)),
+        },
         "check" => check(&rt),
         _ => unreachable!("parse_cli validates the command"),
     };
@@ -204,6 +262,84 @@ fn serve(rt: Arc<dyn Executor>, n: usize) -> Result<()> {
         stats.p50_predict_us(),
         stats.p95_predict_us(),
         stats.predicts
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Durable serve: same deterministic stream as [`serve`], with every
+/// observation WAL-logged before it is applied and the model snapshotted
+/// every K records into `dir`.
+///
+/// The micro-batch ceiling is pinned to 1 here (unlike plain serve's 8):
+/// coalescing is timing-dependent, and WISKI's update math is sensitive to
+/// batch boundaries, so batches of one are what make a crashed-and-resumed
+/// run bitwise comparable to an uninterrupted one.  The `posterior-bits`
+/// line prints the exact f64 bit patterns for the ci.sh kill-and-recover
+/// gate to compare.
+fn serve_durable(
+    rt: Arc<dyn Executor>,
+    n: usize,
+    dir: &str,
+    resume: bool,
+    every: Option<u64>,
+    crash_after: Option<usize>,
+) -> Result<()> {
+    let model = Wiski::new(rt, WiskiConfig::default(), Projection::identity(2))?;
+    let mut policy = CheckpointPolicy::default();
+    if let Some(k) = every {
+        policy.every_records = k;
+    }
+    let (server, report) = ModelServer::spawn_durable(model, 1, dir, policy, resume)?;
+    let h = server.handle();
+    println!(
+        "recovered: snapshot seq {} + {} replayed records -> {} observations{}",
+        report.snapshot_seq,
+        report.replayed,
+        report.observations,
+        if report.truncated { " (torn WAL tail truncated)" } else { "" }
+    );
+    // regenerate the deterministic stream and skip the prefix that is
+    // already durable from the interrupted run
+    let skip = report.observations as usize;
+    let mut rng = Rng::new(0);
+    let t0 = std::time::Instant::now();
+    let mut sent = 0usize;
+    for i in 0..n {
+        let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+        let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+        if i < skip {
+            continue;
+        }
+        h.observe(x, y)?;
+        sent += 1;
+        if crash_after == Some(sent) {
+            // flush first: every sent observation is then WAL-durable
+            // (append happens before apply); abort() skips Drop, so no
+            // final snapshot is written — exactly a hard crash
+            let _ = h.flush()?;
+            eprintln!("crash-after {sent}: aborting without final snapshot");
+            std::process::abort();
+        }
+    }
+    let stats = h.flush()?;
+    println!(
+        "streamed {} observations in {:.2?} ({} skipped as already durable, {} errors)",
+        stats.observed,
+        t0.elapsed(),
+        skip,
+        stats.observe_errors
+    );
+    if let Some(e) = &stats.last_error {
+        eprintln!("last observe error: {e}");
+    }
+    let p = h.predict(vec![vec![0.0, 0.0]])?;
+    println!("posterior at origin: {:+.3} +- {:.3}", p[0].mean, p[0].var_y.sqrt());
+    println!(
+        "posterior-bits: mean={:016x} var_f={:016x} var_y={:016x}",
+        p[0].mean.to_bits(),
+        p[0].var_f.to_bits(),
+        p[0].var_y.to_bits()
     );
     server.shutdown();
     Ok(())
@@ -308,6 +444,39 @@ mod tests {
     fn stream_only_applies_to_serve() {
         assert!(parse_cli(&argv(&["info", "--stream", "5"])).is_err());
         assert!(parse_cli(&argv(&["--stream", "5"])).is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_require_serve_and_each_other() {
+        let cli = parse_cli(&argv(&["serve", "--checkpoint-dir", "/tmp/ckpt"])).unwrap();
+        assert_eq!(cli.checkpoint_dir.as_deref(), Some("/tmp/ckpt"));
+        assert!(!cli.resume);
+        let cli = parse_cli(&argv(&[
+            "serve",
+            "--checkpoint-dir",
+            "d",
+            "--resume",
+            "--checkpoint-every",
+            "10",
+            "--crash-after",
+            "17",
+        ]))
+        .unwrap();
+        assert!(cli.resume);
+        assert_eq!(cli.checkpoint_every, Some(10));
+        assert_eq!(cli.crash_after, Some(17));
+        // --checkpoint-dir is serve-only
+        assert!(parse_cli(&argv(&["info", "--checkpoint-dir", "d"])).is_err());
+        // the satellite flags require --checkpoint-dir
+        assert!(parse_cli(&argv(&["serve", "--resume"])).is_err());
+        assert!(parse_cli(&argv(&["serve", "--checkpoint-every", "10"])).is_err());
+        assert!(parse_cli(&argv(&["serve", "--crash-after", "3"])).is_err());
+        // value validation
+        assert!(parse_cli(&argv(&["serve", "--checkpoint-dir"])).is_err());
+        assert!(parse_cli(&argv(&["serve", "--checkpoint-dir", "d", "--checkpoint-every", "0"]))
+            .is_err());
+        assert!(parse_cli(&argv(&["serve", "--checkpoint-dir", "d", "--crash-after", "zero"]))
+            .is_err());
     }
 
     #[test]

@@ -19,6 +19,22 @@ impl Adam {
         Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
     }
 
+    /// The full optimizer state `(t, m, v)` for checkpointing.
+    pub fn state(&self) -> (u64, &[f64], &[f64]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore state captured by [`state`].  Lengths must already have
+    /// been validated against `dim` by the caller (the persist layer
+    /// checks them against the snapshot before calling).
+    pub fn restore_state(&mut self, t: u64, m: Vec<f64>, v: Vec<f64>) {
+        assert_eq!(m.len(), self.m.len());
+        assert_eq!(v.len(), self.v.len());
+        self.t = t;
+        self.m = m;
+        self.v = v;
+    }
+
     /// One descent step on `params` given `grad` (same length).
     pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
         assert_eq!(params.len(), self.m.len());

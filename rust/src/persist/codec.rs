@@ -1,0 +1,281 @@
+//! Byte-level encoding substrate for the durability layer: little-endian
+//! primitive writers, a bounds-checked reader whose every path returns
+//! `Result` (corrupt input must surface as an error, never a panic or an
+//! out-of-bounds slice), and the CRC-64/ECMA checksum that guards each
+//! snapshot section and WAL record.
+//!
+//! Floats are stored as their IEEE-754 bit patterns (`to_bits`/`from_bits`),
+//! so a save/restore round trip is exact to the bit — the precondition for
+//! the recovery path's bitwise-replay guarantee.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// CRC-64 (ECMA-182 polynomial, reflected, init/xorout = !0)
+// ---------------------------------------------------------------------------
+
+const CRC64_POLY: u64 = 0xC96C_5795_D787_0F42; // reflected ECMA-182
+
+fn crc64_table() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u64; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut crc = i as u64;
+            for _ in 0..8 {
+                crc = if crc & 1 == 1 { (crc >> 1) ^ CRC64_POLY } else { crc >> 1 };
+            }
+            *slot = crc;
+        }
+        table
+    })
+}
+
+/// CRC-64/XZ over `bytes` (table-driven, one pass).
+pub fn crc64(bytes: &[u8]) -> u64 {
+    let table = crc64_table();
+    let mut crc = !0u64;
+    for &b in bytes {
+        crc = table[((crc ^ b as u64) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte builder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string (u16 length).
+    pub fn put_str(&mut self, s: &str) {
+        debug_assert!(s.len() <= u16::MAX as usize);
+        self.buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f64 slice (u64 count, then bit patterns).
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed f32 slice (u64 count, then bit patterns).
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a byte slice.  Every accessor
+/// fails with a truncation error instead of panicking: the inputs are
+/// untrusted on-disk bytes.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("truncated: need {n} bytes, have {}", self.remaining());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("invalid UTF-8 string"))
+    }
+
+    /// Counted f64 slice written by [`Writer::put_f64_slice`].  `max_len`
+    /// bounds the declared count so a corrupt length prefix cannot trigger
+    /// a giant allocation before the truncation check fires.
+    pub fn f64_slice(&mut self, max_len: usize) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        if n > max_len || n * 8 > self.remaining() {
+            bail!("f64 slice length {n} exceeds bound {max_len} or remaining bytes");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Counted f32 slice written by [`Writer::put_f32_slice`].
+    pub fn f32_slice(&mut self, max_len: usize) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        if n > max_len || n * 4 > self.remaining() {
+            bail!("f32 slice length {n} exceeds bound {max_len} or remaining bytes");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc64_known_vector() {
+        // CRC-64/XZ check value for "123456789"
+        assert_eq!(crc64(b"123456789"), 0x995D_C9BB_DF19_39FA);
+        assert_eq!(crc64(b""), 0);
+    }
+
+    #[test]
+    fn crc64_detects_single_bit_flips() {
+        let data = b"the quick brown fox jumps over the lazy dog".to_vec();
+        let base = crc64(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(crc64(&flipped), base, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_primitives_bitwise() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f64(-0.0);
+        w.put_f64(f64::from_bits(0x7FF8_0000_0000_0001)); // a specific NaN
+        w.put_f32(1.5e-30);
+        w.put_str("wiski.theta");
+        w.put_f64_slice(&[1.0, -2.5, 1e-300]);
+        w.put_f32_slice(&[0.25, -0.0]);
+        let bytes = w.into_bytes();
+
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), 0x7FF8_0000_0000_0001);
+        assert_eq!(r.f32().unwrap().to_bits(), 1.5e-30f32.to_bits());
+        assert_eq!(r.str().unwrap(), "wiski.theta");
+        assert_eq!(r.f64_slice(16).unwrap(), vec![1.0, -2.5, 1e-300]);
+        let f32s = r.f32_slice(16).unwrap();
+        assert_eq!(f32s[0], 0.25);
+        assert_eq!(f32s[1].to_bits(), (-0.0f32).to_bits());
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn reader_errors_on_truncation_never_panics() {
+        let bytes = [1u8, 2, 3];
+        let mut r = Reader::new(&bytes);
+        assert!(r.u64().is_err());
+        assert!(r.str().is_err() || r.remaining() <= 3);
+        let mut r = Reader::new(&bytes);
+        assert!(r.f64_slice(10).is_err());
+    }
+
+    #[test]
+    fn slice_length_bound_rejects_corrupt_counts() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // absurd declared count
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.f64_slice(1024).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! [`DurableModel`]: the write-ahead wrapper that makes any
+//! `OnlineGp + Persistable` model crash-recoverable.
+//!
+//! Every observation batch is appended to the WAL *before* it is applied
+//! (write-ahead: a crash between the two replays the record on recovery,
+//! which is idempotent because recovery resumes from the snapshot that
+//! precedes it).  Every `policy.every_records` records the full resumable
+//! state is snapshotted and the covered WAL tail compacted, so recovery
+//! cost is bounded by K records of replay regardless of stream length —
+//! the durable-state analogue of the paper's O(1) update claim.
+//!
+//! Recovery (`DurableModel::open` with `resume = true`):
+//! 1. load the newest *valid* snapshot (corrupt ones are skipped, falling
+//!    back to the previous — see [`super::Store::load_latest`]);
+//! 2. restore the model's state from it (`Persistable::restore_sections`);
+//! 3. replay the WAL records after the snapshot's sequence number through
+//!    `Persistable::replay_record`, truncating any torn/corrupt tail
+//!    (`persist.truncated`), never panicking;
+//! 4. resume appending where the log ends.
+//!
+//! Because the WAL logs the *actual batches* the model applied and the
+//! compute layer is bitwise-deterministic at any thread count / SIMD path
+//! (PRs 7 and 9), the recovered state is `to_bits()`-identical to the
+//! uninterrupted run's — asserted by `tests/persist.rs` and the ci.sh
+//! kill-and-recover gate.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gp::{OnlineGp, Prediction};
+use crate::telemetry;
+
+use super::store::{CheckpointPolicy, FsyncPolicy, Store};
+use super::wal::{self, WalRecord, WalWriter};
+use super::{Persistable, Snapshot};
+
+/// What recovery found in the checkpoint directory.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Sequence number of the snapshot restored (0 = none, cold start).
+    pub snapshot_seq: u64,
+    /// WAL records replayed on top of the snapshot.
+    pub replayed: u64,
+    /// True when a torn/corrupt WAL tail was truncated during replay.
+    pub truncated: bool,
+    /// Total durable records after recovery (`snapshot_seq + replayed`
+    /// unless truncation shortened the log).
+    pub durable_records: u64,
+    /// Observations the recovered model has seen (`num_observed`).
+    pub observations: u64,
+}
+
+/// Durability wrapper: WAL-append + periodic snapshot around an inner
+/// online-GP model.  Implements [`OnlineGp`] so it drops into the
+/// coordinator and benches unchanged.
+pub struct DurableModel<M: OnlineGp + Persistable> {
+    inner: M,
+    store: Store,
+    wal: WalWriter,
+    policy: CheckpointPolicy,
+    /// Last durable record sequence number.
+    seq: u64,
+    /// Sequence covered by the newest snapshot on disk.
+    snap_seq: u64,
+    /// Write a final snapshot when dropped (cleared by [`abandon`] and
+    /// skipped during panics; `abort()`-style crashes never run Drop at
+    /// all, which is exactly what the kill-and-recover gate relies on).
+    final_snapshot: bool,
+}
+
+impl<M: OnlineGp + Persistable> DurableModel<M> {
+    /// Wrap `inner` with durable state in `dir`.
+    ///
+    /// With `resume = false` the directory must be fresh (no snapshots, no
+    /// WAL) — silently overwriting durable state would defeat the point.
+    /// With `resume = true` any existing state is recovered into `inner`
+    /// first; an empty directory is a cold start.
+    pub fn open(
+        mut inner: M,
+        dir: impl AsRef<Path>,
+        policy: CheckpointPolicy,
+        resume: bool,
+    ) -> Result<(Self, RecoveryReport)> {
+        let store = Store::open(dir)?;
+        if !resume && !store.is_fresh()? {
+            bail!(
+                "checkpoint dir {:?} already holds durable state; pass resume to recover it",
+                store.dir()
+            );
+        }
+        let mut report = RecoveryReport::default();
+        if resume {
+            let _span = telemetry::span("persist.recover");
+            if let Some(snap) = store.load_latest(inner.persist_kind())? {
+                inner
+                    .restore_sections(&snap)
+                    .with_context(|| format!("restore snapshot seq {}", snap.seq))?;
+                report.snapshot_seq = snap.seq;
+            }
+            let stats = wal::replay(store.dir(), report.snapshot_seq, |rec| {
+                inner.replay_record(&rec.xs, &rec.ys, &rec.ws)
+            })?;
+            report.replayed = stats.replayed;
+            report.truncated = stats.truncated;
+            report.durable_records = stats.last_seq.max(report.snapshot_seq);
+            report.observations = inner.num_observed() as u64;
+        }
+        let seq = report.durable_records;
+        let wal = WalWriter::open(
+            store.dir(),
+            seq + 1,
+            policy.segment_records,
+            policy.fsync == FsyncPolicy::Always,
+        )?;
+        let dm = DurableModel {
+            inner,
+            store,
+            wal,
+            policy,
+            seq,
+            // a restored snapshot may be newer than report.snapshot_seq if
+            // replay advanced past it; the next snapshot covers everything
+            snap_seq: report.snapshot_seq,
+            final_snapshot: true,
+        };
+        Ok((dm, report))
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Last durable record sequence number (= records ever logged).
+    pub fn durable_records(&self) -> u64 {
+        self.seq
+    }
+
+    /// Log one observation batch then apply it (the write-ahead order).
+    pub fn observe_weighted(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        ws: &[f64],
+    ) -> Result<()> {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), ws.len());
+        if xs.is_empty() {
+            return Ok(());
+        }
+        let rec = WalRecord {
+            seq: self.seq + 1,
+            xs: xs.to_vec(),
+            ys: ys.to_vec(),
+            ws: ws.to_vec(),
+        };
+        self.wal.append(&rec)?;
+        self.seq += 1;
+        self.inner.replay_record(xs, ys, ws)?;
+        if self.seq - self.snap_seq >= self.policy.every_records {
+            self.checkpoint_now()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full resumable state now and compact the covered WAL
+    /// tail.  Called automatically every `policy.every_records` records.
+    pub fn checkpoint_now(&mut self) -> Result<()> {
+        let _span = telemetry::span("persist.snapshot");
+        if self.policy.fsync != FsyncPolicy::Never {
+            self.wal.sync()?;
+        }
+        let snap = Snapshot::new(self.inner.persist_kind(), self.seq, self.inner.save_sections());
+        self.store.write_snapshot(&snap, self.policy.fsync != FsyncPolicy::Never)?;
+        self.snap_seq = self.seq;
+        self.store.prune(self.policy.keep_snapshots)?;
+        Ok(())
+    }
+
+    /// Drop without the final snapshot (tests use this to leave a WAL tail
+    /// behind, simulating a crash).
+    pub fn abandon(mut self) {
+        self.final_snapshot = false;
+    }
+}
+
+impl<M: OnlineGp + Persistable> Drop for DurableModel<M> {
+    fn drop(&mut self) {
+        if !self.final_snapshot || std::thread::panicking() {
+            return;
+        }
+        if self.seq > self.snap_seq {
+            if let Err(e) = self.checkpoint_now() {
+                telemetry::count("persist.errors", 1);
+                eprintln!("persist: final snapshot failed: {e:#}");
+            }
+        }
+    }
+}
+
+impl<M: OnlineGp + Persistable> OnlineGp for DurableModel<M> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn num_observed(&self) -> usize {
+        self.inner.num_observed()
+    }
+
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.observe_weighted(&[x.to_vec()], &[y], &[1.0])
+    }
+
+    fn observe_batch(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        let ws = vec![1.0; ys.len()];
+        self.observe_weighted(xs, ys, &ws)
+    }
+
+    fn predict(&mut self, xs: &[Vec<f64>]) -> Result<Vec<Prediction>> {
+        self.inner.predict(xs)
+    }
+
+    fn refit(&mut self, steps: usize) -> Result<()> {
+        // refit moves theta without an observation record, so it must be
+        // captured by a snapshot or a resume would silently lose it
+        self.inner.refit(steps)?;
+        self.checkpoint_now()
+    }
+}

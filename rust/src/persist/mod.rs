@@ -1,0 +1,71 @@
+//! Durable state: checkpoint/snapshot + write-ahead observation log with
+//! bitwise-deterministic crash recovery.
+//!
+//! The paper's contribution is that the entire WISKI posterior lives in
+//! *fixed-size* cached sufficient statistics; this module is the durability
+//! consequence of that design: a snapshot of the resumable state is O(m²)
+//! bytes no matter how long the stream, and recovery = newest snapshot +
+//! replay of a bounded WAL tail.  Combined with the repo's determinism
+//! contract (bitwise-identical results at any thread count, SIMD on or
+//! off), recovery is a machine-checkable guarantee: the recovered model's
+//! predictions equal the uninterrupted run's `to_bits()`-exactly.
+//!
+//! Pieces (all zero-dependency, std-only):
+//! - [`codec`]: little-endian encode/decode + CRC-64 (bounds-checked —
+//!   corrupt bytes error, never panic);
+//! - [`Snapshot`] / [`Section`]: the versioned, per-section-checksummed
+//!   snapshot format;
+//! - [`wal`]: append-only observation log with per-record checksums,
+//!   segment rotation, and torn-tail truncation;
+//! - [`Store`] / [`CheckpointPolicy`] / [`FsyncPolicy`]: checkpoint
+//!   directory management (atomic snapshot writes, corrupt-snapshot
+//!   fallback, pruning/compaction);
+//! - [`Persistable`]: the save/restore/replay contract a model implements
+//!   (done by `Wiski` and `OSvgp`);
+//! - [`DurableModel`]: the write-ahead wrapper that drops into the
+//!   coordinator (`ModelServer::spawn_durable`) and the `serve
+//!   --checkpoint-dir` CLI path.
+//!
+//! Telemetry: `persist.wal_append` / `persist.snapshot` / `persist.recover`
+//! spans; `persist.records` / `persist.snapshots` / `persist.truncated` /
+//! `persist.snapshot_corrupt` counters; `persist.snapshot_bytes` gauge.
+
+pub mod codec;
+mod durable;
+mod snapshot;
+mod store;
+pub mod wal;
+
+use anyhow::Result;
+
+pub use durable::{DurableModel, RecoveryReport};
+pub use snapshot::{Section, Snapshot, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
+pub use store::{CheckpointPolicy, FsyncPolicy, Store};
+
+/// The save/restore/replay contract the durability layer drives.
+///
+/// Implementations must round-trip *bitwise*: `save_sections` followed by
+/// `restore_sections` on a freshly constructed model of the same
+/// configuration reproduces every f64/f32 of resumable state exactly
+/// (floats are stored as IEEE-754 bit patterns, so this is a matter of
+/// saving *all* state that feeds the forward path — hyperparameters,
+/// optimizer moments, caches — not of numeric care).
+pub trait Persistable {
+    /// Stable model-family tag stored in the snapshot header ("wiski",
+    /// "osvgp").  Restore rejects snapshots of a different kind.
+    fn persist_kind(&self) -> &'static str;
+
+    /// Serialize the resumable state into named sections.
+    fn save_sections(&self) -> Vec<Section>;
+
+    /// Restore state from a decoded snapshot into `self`.  Must validate
+    /// structural compatibility (kind, dimensions, tensor shapes) and fail
+    /// with an error — never panic, never partially apply — on mismatch or
+    /// corruption that slipped past the checksums.
+    fn restore_sections(&mut self, snap: &Snapshot) -> Result<()>;
+
+    /// Apply one WAL observation record.  This must be the *same* code
+    /// path an original (non-replay) observation takes, with the same
+    /// batch boundary, so replay reproduces the original run bitwise.
+    fn replay_record(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &[f64]) -> Result<()>;
+}

@@ -1,0 +1,222 @@
+//! Versioned, length-prefixed, per-section-checksummed binary snapshot
+//! format.
+//!
+//! A snapshot holds a model's complete *resumable* state as named byte
+//! sections (theta, optimizer moments, the fixed-size WISKI caches, ...).
+//! Because WISKI's posterior lives entirely in fixed-size sufficient
+//! statistics, a snapshot is O(m²) bytes no matter how many observations
+//! it summarizes — the durable-state mirror of the paper's O(1) update
+//! claim, asserted by `cargo bench -- persist`.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   8 bytes  "WISKISNP"
+//! version u32      (currently 1; unknown versions are a clean error)
+//! kind    str      model family tag ("wiski", "osvgp")
+//! seq     u64      WAL record sequence number this snapshot covers
+//! count   u32      number of sections
+//! section × count:
+//!   name        str
+//!   payload_len u64
+//!   payload     bytes
+//!   crc         u64   CRC-64 over name bytes + payload
+//! file_crc u64     CRC-64 over everything before it
+//! ```
+//!
+//! The per-section checksums localize corruption (tests bit-flip each
+//! section and assert clean rejection); the trailing file checksum also
+//! covers the header fields — in particular `seq`, which the recovery path
+//! uses as the WAL replay cursor and must not trust if damaged.
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{crc64, Reader, Writer};
+
+/// Snapshot file magic.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"WISKISNP";
+/// Current format version.  Bump on any layout change; readers reject
+/// versions they do not know rather than guessing.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Hard ceiling on section count and payload size (1 GiB) so a corrupt
+/// header cannot drive a pathological allocation.
+const MAX_SECTIONS: u32 = 256;
+const MAX_SECTION_BYTES: u64 = 1 << 30;
+
+/// One named state blob inside a snapshot.
+#[derive(Clone, Debug)]
+pub struct Section {
+    pub name: String,
+    pub payload: Vec<u8>,
+}
+
+impl Section {
+    pub fn new(name: &str, payload: Vec<u8>) -> Self {
+        Self { name: name.to_string(), payload }
+    }
+}
+
+/// A decoded (or to-be-encoded) snapshot: model kind tag, the WAL sequence
+/// number it covers, and its state sections.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub kind: String,
+    pub seq: u64,
+    pub sections: Vec<Section>,
+}
+
+impl Snapshot {
+    pub fn new(kind: &str, seq: u64, sections: Vec<Section>) -> Self {
+        Self { kind: kind.to_string(), seq, sections }
+    }
+
+    /// The payload of the named section, if present.
+    pub fn section(&self, name: &str) -> Option<&[u8]> {
+        self.sections.iter().find(|s| s.name == name).map(|s| s.payload.as_slice())
+    }
+
+    /// The named section's payload, or a descriptive error (restore paths
+    /// treat a missing section as corruption, not a default).
+    pub fn require(&self, name: &str) -> Result<&[u8]> {
+        self.section(name).with_context(|| format!("snapshot is missing section {name:?}"))
+    }
+
+    /// Serialize to the on-disk byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_bytes(SNAPSHOT_MAGIC);
+        w.put_u32(SNAPSHOT_VERSION);
+        w.put_str(&self.kind);
+        w.put_u64(self.seq);
+        w.put_u32(self.sections.len() as u32);
+        for s in &self.sections {
+            w.put_str(&s.name);
+            w.put_u64(s.payload.len() as u64);
+            w.put_bytes(&s.payload);
+            let mut crc_input = s.name.as_bytes().to_vec();
+            crc_input.extend_from_slice(&s.payload);
+            w.put_u64(crc64(&crc_input));
+        }
+        let body = w.into_bytes();
+        let file_crc = crc64(&body);
+        let mut out = body;
+        out.extend_from_slice(&file_crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully validate a snapshot: magic, version, every section
+    /// checksum, and the whole-file checksum.  Corrupt input is an `Err`,
+    /// never a panic and never a silently-wrong snapshot.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < SNAPSHOT_MAGIC.len() + 4 + 8 {
+            bail!("snapshot too short ({} bytes)", bytes.len());
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored_crc = u64::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc64(body) != stored_crc {
+            bail!("snapshot file checksum mismatch");
+        }
+        let mut r = Reader::new(body);
+        let magic = r.take(SNAPSHOT_MAGIC.len())?;
+        if magic != SNAPSHOT_MAGIC {
+            bail!("bad snapshot magic {magic:?}");
+        }
+        let version = r.u32()?;
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})");
+        }
+        let kind = r.str()?;
+        let seq = r.u64()?;
+        let count = r.u32()?;
+        if count > MAX_SECTIONS {
+            bail!("snapshot declares {count} sections (limit {MAX_SECTIONS})");
+        }
+        let mut sections = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let name = r.str()?;
+            let len = r.u64()?;
+            if len > MAX_SECTION_BYTES {
+                bail!("section {name:?} declares {len} bytes (limit {MAX_SECTION_BYTES})");
+            }
+            let payload = r.take(len as usize)?.to_vec();
+            let stored = r.u64()?;
+            let mut crc_input = name.as_bytes().to_vec();
+            crc_input.extend_from_slice(&payload);
+            if crc64(&crc_input) != stored {
+                bail!("section {name:?} checksum mismatch");
+            }
+            sections.push(Section { name, payload });
+        }
+        if !r.is_done() {
+            bail!("{} trailing bytes after last section", r.remaining());
+        }
+        Ok(Snapshot { kind, seq, sections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot::new(
+            "wiski",
+            42,
+            vec![
+                Section::new("wiski.theta", vec![1, 2, 3, 4, 5, 6, 7, 8]),
+                Section::new("wiski.caches", (0..64u8).collect()),
+            ],
+        )
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let snap = sample();
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&bytes).unwrap();
+        assert_eq!(back.kind, "wiski");
+        assert_eq!(back.seq, 42);
+        assert_eq!(back.sections.len(), 2);
+        assert_eq!(back.section("wiski.theta").unwrap(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(back.require("wiski.caches").unwrap().len(), 64);
+        assert!(back.section("nope").is_none());
+        assert!(back.require("nope").is_err());
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut flipped = bytes.clone();
+                flipped[i] ^= 1 << bit;
+                assert!(
+                    Snapshot::decode(&flipped).is_err(),
+                    "bit flip at byte {i} bit {bit} was not detected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_an_error() {
+        let bytes = sample().encode();
+        for len in 0..bytes.len() {
+            assert!(Snapshot::decode(&bytes[..len]).is_err(), "truncated at {len} decoded");
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_a_clean_error() {
+        let mut bytes = sample().encode();
+        // version field sits right after the 8-byte magic; patch it and
+        // re-seal the file checksum so only the version check can fire
+        bytes[8] = 99;
+        let body_len = bytes.len() - 8;
+        let crc = crc64(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let err = Snapshot::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+}

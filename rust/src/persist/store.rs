@@ -1,0 +1,255 @@
+//! Checkpoint directory management: atomic snapshot writes, newest-valid
+//! snapshot selection with fallback past corrupt files, and pruning of
+//! snapshots + WAL segments a newer snapshot has made redundant.
+//!
+//! Directory layout:
+//!
+//! ```text
+//! <dir>/snap-<seq>.ckpt    snapshots (seq = WAL records folded in)
+//! <dir>/wal-<seq>.log      WAL segments (seq = first record in the file)
+//! ```
+//!
+//! Snapshots are written to a temp file and renamed into place, so a crash
+//! mid-write leaves at worst a `.tmp` orphan, never a half-written `.ckpt`
+//! under the canonical name.  Loading walks snapshots newest-first and
+//! *skips* any that fail validation (counted as `persist.snapshot_corrupt`)
+//! — corruption of the latest checkpoint degrades recovery to the previous
+//! one plus a longer WAL replay, it never aborts recovery or loads
+//! silently-wrong state.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::telemetry;
+
+use super::snapshot::Snapshot;
+use super::wal;
+
+/// When to fsync durable files to the device.
+///
+/// Every WAL append is always *flushed to the OS* (`write` + `flush`), so
+/// durable state survives process kills regardless of this policy; fsync
+/// only matters for whole-machine crashes.  See ROADMAP for the decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Never fsync (fastest; durable against process death only).
+    Never,
+    /// fsync the WAL and snapshot when a snapshot is written (default).
+    OnSnapshot,
+    /// fsync every WAL append (machine-crash durable, slowest).
+    Always,
+}
+
+/// Knobs for the durability layer.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointPolicy {
+    /// Write a snapshot every this many WAL records (batches).
+    pub every_records: u64,
+    /// Rotate WAL segments every this many records.
+    pub segment_records: u64,
+    /// Device-sync policy.
+    pub fsync: FsyncPolicy,
+    /// Snapshots retained after a new one lands (≥ 1; keeping 2 means a
+    /// corrupt newest snapshot still recovers from the previous one).
+    pub keep_snapshots: usize,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        Self {
+            every_records: 64,
+            segment_records: 256,
+            fsync: FsyncPolicy::OnSnapshot,
+            keep_snapshots: 2,
+        }
+    }
+}
+
+/// A checkpoint directory.
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) the checkpoint directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Store> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create checkpoint dir {dir:?}"))?;
+        Ok(Store { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True when the directory holds no durable state (no snapshots and no
+    /// WAL segments).
+    pub fn is_fresh(&self) -> Result<bool> {
+        Ok(self.list_snapshots()?.is_empty() && wal::list_segments(&self.dir)?.is_empty())
+    }
+
+    fn snapshot_path(&self, seq: u64) -> PathBuf {
+        self.dir.join(format!("snap-{seq:020}.ckpt"))
+    }
+
+    /// All snapshots, sorted ascending by covered sequence number.
+    pub fn list_snapshots(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(num) = name.strip_prefix("snap-").and_then(|s| s.strip_suffix(".ckpt")) {
+                if let Ok(seq) = num.parse::<u64>() {
+                    out.push((seq, entry.path()));
+                }
+            }
+        }
+        out.sort_unstable_by_key(|(seq, _)| *seq);
+        Ok(out)
+    }
+
+    /// Atomically persist a snapshot (temp file + rename), fsyncing per
+    /// `fsync`.  Returns the snapshot's byte size.
+    pub fn write_snapshot(&self, snap: &Snapshot, fsync: bool) -> Result<u64> {
+        let bytes = snap.encode();
+        let final_path = self.snapshot_path(snap.seq);
+        let tmp_path = final_path.with_extension("ckpt.tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp_path)
+                .with_context(|| format!("create {tmp_path:?}"))?;
+            f.write_all(&bytes)?;
+            f.flush()?;
+            if fsync {
+                f.sync_all()?;
+            }
+        }
+        std::fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("rename {tmp_path:?} -> {final_path:?}"))?;
+        if fsync {
+            // best-effort directory sync so the rename itself is durable
+            if let Ok(d) = std::fs::File::open(&self.dir) {
+                let _ = d.sync_all();
+            }
+        }
+        telemetry::counter("persist.snapshots").inc();
+        telemetry::gauge("persist.snapshot_bytes").set(bytes.len() as u64);
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load the newest snapshot that decodes cleanly and matches
+    /// `expected_kind`.  Corrupt or mismatched files are skipped (counted
+    /// as `persist.snapshot_corrupt`) and recovery falls back to the next
+    /// older one; `None` when no valid snapshot exists.
+    pub fn load_latest(&self, expected_kind: &str) -> Result<Option<Snapshot>> {
+        for (seq, path) in self.list_snapshots()?.into_iter().rev() {
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(e) => {
+                    telemetry::count("persist.snapshot_corrupt", 1);
+                    eprintln!("persist: unreadable snapshot {path:?}: {e}");
+                    continue;
+                }
+            };
+            match Snapshot::decode(&bytes) {
+                Ok(snap) if snap.kind == expected_kind && snap.seq == seq => {
+                    return Ok(Some(snap));
+                }
+                Ok(snap) => {
+                    telemetry::count("persist.snapshot_corrupt", 1);
+                    eprintln!(
+                        "persist: snapshot {path:?} is for kind {:?} seq {} (expected {:?} seq {seq}); skipping",
+                        snap.kind, snap.seq, expected_kind
+                    );
+                }
+                Err(e) => {
+                    telemetry::count("persist.snapshot_corrupt", 1);
+                    eprintln!("persist: corrupt snapshot {path:?}: {e:#}; falling back");
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Drop snapshots beyond the newest `keep`, then drop WAL segments
+    /// fully covered by the oldest snapshot that remains.
+    pub fn prune(&self, keep: usize) -> Result<()> {
+        if keep == 0 {
+            bail!("keep_snapshots must be >= 1");
+        }
+        let snaps = self.list_snapshots()?;
+        if snaps.len() > keep {
+            for (_, path) in &snaps[..snaps.len() - keep] {
+                std::fs::remove_file(path)?;
+            }
+        }
+        let oldest_kept = snaps[snaps.len().saturating_sub(keep)..]
+            .first()
+            .map(|(seq, _)| *seq);
+        if let Some(covered) = oldest_kept {
+            wal::compact(&self.dir, covered)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::snapshot::Section;
+
+    fn tmp_store(tag: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("wiski-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(&dir).unwrap()
+    }
+
+    fn snap(seq: u64) -> Snapshot {
+        Snapshot::new("wiski", seq, vec![Section::new("s", vec![seq as u8; 16])])
+    }
+
+    #[test]
+    fn newest_valid_snapshot_wins() {
+        let store = tmp_store("newest");
+        assert!(store.is_fresh().unwrap());
+        store.write_snapshot(&snap(10), false).unwrap();
+        store.write_snapshot(&snap(20), false).unwrap();
+        assert!(!store.is_fresh().unwrap());
+        let got = store.load_latest("wiski").unwrap().unwrap();
+        assert_eq!(got.seq, 20);
+        assert!(store.load_latest("osvgp").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let store = tmp_store("fallback");
+        store.write_snapshot(&snap(10), false).unwrap();
+        store.write_snapshot(&snap(20), false).unwrap();
+        // flip one bit in the newest file
+        let (_, path) = store.list_snapshots().unwrap().pop().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let got = store.load_latest("wiski").unwrap().unwrap();
+        assert_eq!(got.seq, 10, "must fall back past the corrupt snapshot");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn prune_keeps_newest_and_compacts_wal() {
+        let store = tmp_store("prune");
+        for seq in [4u64, 8, 12] {
+            store.write_snapshot(&snap(seq), false).unwrap();
+        }
+        store.prune(2).unwrap();
+        let snaps = store.list_snapshots().unwrap();
+        assert_eq!(snaps.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![8, 12]);
+        assert!(store.prune(0).is_err());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

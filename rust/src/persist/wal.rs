@@ -1,0 +1,493 @@
+//! Append-only write-ahead log of observation records.
+//!
+//! Each record is one *observation batch* — exactly the unit the model
+//! applies in a single `observe_weighted` call — because WISKI's update is
+//! batch-boundary-sensitive (one MLL evaluation and one Adam step per
+//! chunk).  Logging the actual batches means replay re-executes the exact
+//! same sequence of artifact calls the original run made, which is what
+//! makes recovery bitwise: identical inputs through the deterministic
+//! compute layer (PRs 7/9) give identical `to_bits()` state.
+//!
+//! Record layout (little-endian):
+//!
+//! ```text
+//! magic    u32   "WALR"
+//! body_len u32
+//! body:
+//!   seq    u64   1-based, strictly consecutive within a log
+//!   count  u32   points in the batch
+//!   dim    u32   input dimension
+//!   xs     count·dim f64 bit patterns
+//!   ys     count f64
+//!   ws     count f64 (per-point noise-scale weights)
+//! crc      u64   CRC-64 over body
+//! ```
+//!
+//! Segments are files named `wal-<first_seq>.log`; the writer rotates to a
+//! new segment every `segment_records` appends so compaction can drop whole
+//! files once a snapshot covers them.  The replay path validates magic,
+//! length, checksum, and sequence continuity; the first invalid or torn
+//! record *truncates the log there* (surfaced as the `persist.truncated`
+//! counter, never a panic) — everything after an interrupted write is
+//! untrustworthy by construction in an append-only log.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read as IoRead, Write as IoWrite};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::telemetry;
+
+use super::codec::{crc64, Reader, Writer};
+
+const RECORD_MAGIC: u32 = 0x5257_414C; // "WALR" little-endian
+/// Bound on points per record: a corrupt count field must not allocate.
+const MAX_RECORD_POINTS: usize = 1 << 20;
+const MAX_RECORD_DIM: usize = 1 << 10;
+
+/// One logged observation batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub xs: Vec<Vec<f64>>,
+    pub ys: Vec<f64>,
+    pub ws: Vec<f64>,
+}
+
+impl WalRecord {
+    fn encode(&self) -> Vec<u8> {
+        let count = self.ys.len();
+        let dim = self.xs.first().map_or(0, |x| x.len());
+        let mut body = Writer::new();
+        body.put_u64(self.seq);
+        body.put_u32(count as u32);
+        body.put_u32(dim as u32);
+        for x in &self.xs {
+            debug_assert_eq!(x.len(), dim);
+            for &v in x {
+                body.put_f64(v);
+            }
+        }
+        for &y in &self.ys {
+            body.put_f64(y);
+        }
+        for &w in &self.ws {
+            body.put_f64(w);
+        }
+        let body = body.into_bytes();
+        let mut out = Writer::new();
+        out.put_u32(RECORD_MAGIC);
+        out.put_u32(body.len() as u32);
+        out.put_bytes(&body);
+        out.put_u64(crc64(&body));
+        out.into_bytes()
+    }
+
+    fn decode_body(body: &[u8]) -> Result<WalRecord> {
+        let mut r = Reader::new(body);
+        let seq = r.u64()?;
+        let count = r.u32()? as usize;
+        let dim = r.u32()? as usize;
+        if count > MAX_RECORD_POINTS || dim > MAX_RECORD_DIM {
+            bail!("record declares count={count} dim={dim} beyond limits");
+        }
+        let mut xs = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut x = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                x.push(r.f64()?);
+            }
+            xs.push(x);
+        }
+        let mut ys = Vec::with_capacity(count);
+        for _ in 0..count {
+            ys.push(r.f64()?);
+        }
+        let mut ws = Vec::with_capacity(count);
+        for _ in 0..count {
+            ws.push(r.f64()?);
+        }
+        if !r.is_done() {
+            bail!("{} trailing bytes in record body", r.remaining());
+        }
+        Ok(WalRecord { seq, xs, ys, ws })
+    }
+}
+
+/// Segment file name for the segment whose first record is `first_seq`.
+fn segment_name(first_seq: u64) -> String {
+    format!("wal-{first_seq:020}.log")
+}
+
+/// All `wal-*.log` segments in `dir`, sorted by first sequence number.
+pub fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out), // missing dir = no segments
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(num) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) {
+            if let Ok(seq) = num.parse::<u64>() {
+                out.push((seq, entry.path()));
+            }
+        }
+    }
+    out.sort_unstable_by_key(|(seq, _)| *seq);
+    Ok(out)
+}
+
+/// Append side of the log.
+pub struct WalWriter {
+    dir: PathBuf,
+    file: Option<File>,
+    records_in_segment: u64,
+    segment_records: u64,
+    fsync_always: bool,
+}
+
+impl WalWriter {
+    /// Open the log for appending in `dir`.  `next_seq` is the sequence
+    /// number the next appended record will carry; if the newest existing
+    /// segment is still below `segment_records` it is extended, otherwise
+    /// (or with no segments) the first append starts a fresh segment.
+    pub fn open(dir: &Path, next_seq: u64, segment_records: u64, fsync_always: bool) -> Result<Self> {
+        let segment_records = segment_records.max(1);
+        let mut w = Self {
+            dir: dir.to_path_buf(),
+            file: None,
+            records_in_segment: 0,
+            segment_records,
+            fsync_always,
+        };
+        if let Some((first_seq, path)) = list_segments(dir)?.pop() {
+            // count the records already in the newest segment so rotation
+            // keeps its cadence across restarts
+            let existing = next_seq.saturating_sub(first_seq);
+            if existing > 0 && existing < segment_records {
+                let file = OpenOptions::new()
+                    .append(true)
+                    .open(&path)
+                    .with_context(|| format!("open {path:?} for append"))?;
+                w.file = Some(file);
+                w.records_in_segment = existing;
+            }
+        }
+        Ok(w)
+    }
+
+    /// Append one record; `seq` must advance by exactly 1 per call.
+    /// The bytes are flushed to the OS before returning (surviving process
+    /// kill); fsync to the device is per [`super::FsyncPolicy`].
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let _span = telemetry::span("persist.wal_append");
+        if self.file.is_none() || self.records_in_segment >= self.segment_records {
+            let path = self.dir.join(segment_name(rec.seq));
+            // create(true) rather than create_new: a crash between segment
+            // creation and the first append leaves an empty file behind,
+            // and appending to it is exactly right
+            let file = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("create WAL segment {path:?}"))?;
+            self.file = Some(file);
+            self.records_in_segment = 0;
+        }
+        let bytes = rec.encode();
+        let file = self.file.as_mut().expect("segment opened above");
+        file.write_all(&bytes)?;
+        file.flush()?;
+        if self.fsync_always {
+            file.sync_data()?;
+        }
+        self.records_in_segment += 1;
+        telemetry::counter("persist.records").inc();
+        Ok(())
+    }
+
+    /// fsync the current segment (called when a snapshot is taken).
+    pub fn sync(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of a [`replay`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayStats {
+    /// Records handed to the callback.
+    pub replayed: u64,
+    /// Highest sequence number seen (0 if none).
+    pub last_seq: u64,
+    /// True when a torn or corrupt tail was truncated away.
+    pub truncated: bool,
+}
+
+/// Replay every valid record with `seq > after_seq` in order, calling `f`
+/// for each.  The first torn or corrupt record truncates its segment file
+/// at the last valid boundary and deletes any later segments; this is
+/// counted as `persist.truncated`, never raised as a panic.  Records at or
+/// below `after_seq` (already folded into a snapshot) are skipped but still
+/// checksum-validated, since they position the continuity check.
+pub fn replay(
+    dir: &Path,
+    after_seq: u64,
+    mut f: impl FnMut(&WalRecord) -> Result<()>,
+) -> Result<ReplayStats> {
+    let mut stats = ReplayStats::default();
+    let mut expected_seq: Option<u64> = None;
+    let segments = list_segments(dir)?;
+    for (si, (first_seq, path)) in segments.iter().enumerate() {
+        let mut bytes = Vec::new();
+        File::open(path)
+            .and_then(|mut fh| fh.read_to_end(&mut bytes))
+            .with_context(|| format!("read WAL segment {path:?}"))?;
+        let mut offset = 0usize;
+        let mut valid_end = 0usize;
+        let mut corrupt = false;
+        while offset < bytes.len() {
+            match next_record(&bytes[offset..]) {
+                Ok(Some((rec, len))) => {
+                    let expect = expected_seq.unwrap_or(*first_seq);
+                    if rec.seq != expect {
+                        corrupt = true; // sequence gap: treat as corruption
+                        break;
+                    }
+                    expected_seq = Some(rec.seq + 1);
+                    if rec.seq > after_seq {
+                        f(&rec)?;
+                        stats.replayed += 1;
+                    }
+                    stats.last_seq = rec.seq;
+                    offset += len;
+                    valid_end = offset;
+                }
+                Ok(None) | Err(_) => {
+                    corrupt = true;
+                    break;
+                }
+            }
+        }
+        if corrupt {
+            stats.truncated = true;
+            telemetry::count("persist.truncated", 1);
+            truncate_file(path, valid_end as u64)
+                .with_context(|| format!("truncate corrupt WAL tail in {path:?}"))?;
+            // everything after the corruption point is untrustworthy,
+            // including whole later segments
+            for (_, later) in &segments[si + 1..] {
+                let _ = std::fs::remove_file(later);
+            }
+            break;
+        }
+    }
+    Ok(stats)
+}
+
+/// Parse the record at the head of `bytes`.  `Ok(Some((record, len)))` on a
+/// valid record, `Ok(None)` on a torn (incomplete) tail, `Err` on corrupt
+/// framing or checksum.
+fn next_record(bytes: &[u8]) -> Result<Option<(WalRecord, usize)>> {
+    if bytes.len() < 8 {
+        return Ok(None);
+    }
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != RECORD_MAGIC {
+        bail!("bad record magic {magic:#010x}");
+    }
+    let body_len = r.u32()? as usize;
+    if body_len > 8 + MAX_RECORD_POINTS * (MAX_RECORD_DIM + 2) * 8 {
+        bail!("record declares absurd body length {body_len}");
+    }
+    if bytes.len() < 8 + body_len + 8 {
+        return Ok(None); // torn tail: the write never completed
+    }
+    let body = &bytes[8..8 + body_len];
+    let stored = u64::from_le_bytes(bytes[8 + body_len..8 + body_len + 8].try_into().unwrap());
+    if crc64(body) != stored {
+        bail!("record checksum mismatch");
+    }
+    let rec = WalRecord::decode_body(body)?;
+    Ok(Some((rec, 8 + body_len + 8)))
+}
+
+fn truncate_file(path: &Path, len: u64) -> Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(len)?;
+    f.sync_data()?;
+    drop(f);
+    // a fully-truncated segment carries no records; drop the file so the
+    // writer can recreate it cleanly
+    if len == 0 {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(())
+}
+
+/// Delete every segment whose records are *all* at or below `covered_seq`
+/// (a snapshot has folded them in).  The newest segment is always kept:
+/// the writer may still be appending to it.
+pub fn compact(dir: &Path, covered_seq: u64) -> Result<u64> {
+    let segments = list_segments(dir)?;
+    let mut removed = 0u64;
+    for window in segments.windows(2) {
+        let (_, path) = &window[0];
+        let (next_first, _) = &window[1];
+        // segment records span [first, next_first); fully covered iff
+        // next_first - 1 <= covered_seq
+        if next_first.saturating_sub(1) <= covered_seq {
+            std::fs::remove_file(path)?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("wiski-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(seq: u64) -> WalRecord {
+        WalRecord {
+            seq,
+            xs: vec![vec![0.1 * seq as f64, -0.2]],
+            ys: vec![seq as f64],
+            ws: vec![1.0],
+        }
+    }
+
+    #[test]
+    fn append_replay_round_trip_preserves_bits() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = WalWriter::open(&dir, 1, 1000, false).unwrap();
+        let records: Vec<WalRecord> = (1..=5).map(rec).collect();
+        for r in &records {
+            w.append(r).unwrap();
+        }
+        drop(w);
+        let mut seen = Vec::new();
+        let stats = replay(&dir, 0, |r| {
+            seen.push(r.clone());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.replayed, 5);
+        assert_eq!(stats.last_seq, 5);
+        assert!(!stats.truncated);
+        assert_eq!(seen, records);
+        // skip-prefix replay honors the snapshot cursor
+        let stats = replay(&dir, 3, |r| {
+            assert!(r.seq > 3);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.replayed, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_produces_segments_and_compaction_drops_covered_ones() {
+        let dir = tmp_dir("rotate");
+        let mut w = WalWriter::open(&dir, 1, 2, false).unwrap();
+        for s in 1..=7 {
+            w.append(&rec(s)).unwrap();
+        }
+        drop(w);
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 4, "7 records at 2/segment -> 4 segments");
+        assert_eq!(segs[0].0, 1);
+        assert_eq!(segs[1].0, 3);
+        // snapshot at seq 5 covers segments [1,2] and [3,4] but not [5,6]
+        let removed = compact(&dir, 5).unwrap();
+        assert_eq!(removed, 2);
+        let stats = replay(&dir, 5, |_| Ok(())).unwrap();
+        assert_eq!(stats.replayed, 2); // 6 and 7 survive
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_reopen_continues_segment_cadence() {
+        let dir = tmp_dir("reopen");
+        let mut w = WalWriter::open(&dir, 1, 4, false).unwrap();
+        for s in 1..=3 {
+            w.append(&rec(s)).unwrap();
+        }
+        drop(w);
+        // reopen mid-segment: record 4 must extend wal-1, record 5 rotates
+        let mut w = WalWriter::open(&dir, 4, 4, false).unwrap();
+        w.append(&rec(4)).unwrap();
+        w.append(&rec(5)).unwrap();
+        drop(w);
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[1].0, 5);
+        let stats = replay(&dir, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.replayed, 5);
+        assert!(!stats.truncated);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_cleanly() {
+        let dir = tmp_dir("torn");
+        let mut w = WalWriter::open(&dir, 1, 1000, false).unwrap();
+        for s in 1..=3 {
+            w.append(&rec(s)).unwrap();
+        }
+        drop(w);
+        let (_, path) = list_segments(&dir).unwrap().pop().unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        // tear the last record: chop 5 bytes off the end
+        OpenOptions::new().write(true).open(&path).unwrap().set_len(len - 5).unwrap();
+        let stats = replay(&dir, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.replayed, 2);
+        assert!(stats.truncated);
+        // after truncation the log replays cleanly with no further loss
+        let stats = replay(&dir, 0, |_| Ok(())).unwrap();
+        assert_eq!(stats.replayed, 2);
+        assert!(!stats.truncated);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mid_file_corruption_truncates_and_drops_later_segments() {
+        let dir = tmp_dir("corrupt");
+        let mut w = WalWriter::open(&dir, 1, 2, false).unwrap();
+        for s in 1..=6 {
+            w.append(&rec(s)).unwrap();
+        }
+        drop(w);
+        // flip a byte inside record 3 (first record of the second segment)
+        let segs = list_segments(&dir).unwrap();
+        let path = segs[1].1.clone();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut seen = Vec::new();
+        let stats = replay(&dir, 0, |r| {
+            seen.push(r.seq);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![1, 2], "only the intact prefix replays");
+        assert!(stats.truncated);
+        // segment 3 (records 5,6) was after the corruption: gone
+        assert_eq!(list_segments(&dir).unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,235 @@
+//! Dedicated oracle suite for the iterative linear algebra: `cg_solve`
+//! against a dense Cholesky solve on SPD systems across sizes and
+//! conditioning, and `lanczos` Ritz values against matrices built with a
+//! *known* spectrum (Householder-conjugated diagonals), with the Ritz
+//! values extracted from the tridiagonal by in-test Sturm bisection.
+//!
+//! These are the substrates under the paper's Exact-PCG baseline and the
+//! WISKI root decomposition (§3.2); their in-module tests cover one happy
+//! path each, this file pins the numerical contracts.
+
+use wiski::linalg::{cg_solve, dot, lanczos, CgOptions, Cholesky, Mat};
+use wiski::rng::Rng;
+
+/// Random SPD matrix B Bᵀ + ridge·I (well-conditioned for ridge ≈ n).
+fn random_spd(n: usize, ridge: f64, rng: &mut Rng) -> Mat {
+    let b = Mat::from_fn(n, n, |_, _| rng.normal());
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = dot(b.row(i), b.row(j));
+        }
+        a[(i, i)] += ridge;
+    }
+    a
+}
+
+/// SPD matrix with an exactly known spectrum: H·diag(eigs)·Hᵀ for a
+/// Householder reflector H = I − 2vvᵀ (orthogonal and symmetric).
+fn spd_with_spectrum(eigs: &[f64], rng: &mut Rng) -> Mat {
+    let n = eigs.len();
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nv = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    for x in v.iter_mut() {
+        *x /= nv;
+    }
+    // A_ij = sum_k H_ik * eigs_k * H_jk with H_ik = δ_ik − 2 v_i v_k
+    Mat::from_fn(n, n, |i, j| {
+        let mut s = 0.0;
+        for k in 0..n {
+            let hik = if i == k { 1.0 } else { 0.0 } - 2.0 * v[i] * v[k];
+            let hjk = if j == k { 1.0 } else { 0.0 } - 2.0 * v[j] * v[k];
+            s += hik * eigs[k] * hjk;
+        }
+        s
+    })
+}
+
+/// Sturm count: number of eigenvalues of the symmetric tridiagonal
+/// (alpha, beta) strictly below `x`, via the LDLᵀ sign sequence.
+fn sturm_count_below(alpha: &[f64], beta: &[f64], x: f64) -> usize {
+    let mut count = 0;
+    let mut d = 1.0f64;
+    for i in 0..alpha.len() {
+        let off = if i == 0 { 0.0 } else { beta[i - 1] * beta[i - 1] / d };
+        d = alpha[i] - x - off;
+        if d == 0.0 {
+            d = -1e-300; // nudge off the singularity, counting it as below
+        }
+        if d < 0.0 {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// The i-th smallest eigenvalue (0-based) of the tridiagonal by bisection
+/// on the Sturm count.  `lo`/`hi` must bracket the whole spectrum.
+fn tridiag_eigenvalue(alpha: &[f64], beta: &[f64], i: usize, mut lo: f64, mut hi: f64) -> f64 {
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if sturm_count_below(alpha, beta, mid) <= i {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-12 * hi.abs().max(1.0) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// All Ritz values of a Lanczos tridiagonal, ascending.
+fn ritz_values(alpha: &[f64], beta: &[f64]) -> Vec<f64> {
+    // Gershgorin bound brackets every eigenvalue of the tridiagonal
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..alpha.len() {
+        let mut radius = 0.0;
+        if i > 0 {
+            radius += beta[i - 1].abs();
+        }
+        if i < beta.len() {
+            radius += beta[i].abs();
+        }
+        lo = lo.min(alpha[i] - radius);
+        hi = hi.max(alpha[i] + radius);
+    }
+    (0..alpha.len())
+        .map(|i| tridiag_eigenvalue(alpha, beta, i, lo - 1.0, hi + 1.0))
+        .collect()
+}
+
+#[test]
+fn cg_matches_cholesky_across_sizes() {
+    let mut rng = Rng::new(31);
+    for &n in &[4usize, 16, 40] {
+        let a = random_spd(n, n as f64, &mut rng);
+        let chol = Cholesky::factor(&a, 0.0).unwrap();
+        for trial in 0..3 {
+            let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (x, iters) = cg_solve(|v| a.matvec(v), &rhs, CgOptions::default());
+            assert!(iters <= n + 1, "CG must terminate within n+1 iters, took {iters}");
+            let x_ref = chol.solve(&rhs);
+            for i in 0..n {
+                assert!(
+                    (x[i] - x_ref[i]).abs() < 1e-6,
+                    "n={n} trial={trial} component {i}: cg {} vs chol {}",
+                    x[i],
+                    x_ref[i]
+                );
+            }
+            // and the residual itself is small in the rhs scale
+            let ax = a.matvec(&x);
+            let res: f64 = ax.iter().zip(&rhs).map(|(u, v)| (u - v) * (u - v)).sum::<f64>().sqrt();
+            let nb: f64 = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(res / nb < 1e-6, "relative residual {res}/{nb}");
+        }
+    }
+}
+
+#[test]
+fn cg_handles_ill_conditioned_spectrum() {
+    let mut rng = Rng::new(32);
+    // condition number 1e6: known spectrum from 1e-3 to 1e3
+    let n = 12;
+    let eigs: Vec<f64> = (0..n)
+        .map(|i| 10f64.powf(-3.0 + 6.0 * i as f64 / (n - 1) as f64))
+        .collect();
+    let a = spd_with_spectrum(&eigs, &mut rng);
+    let rhs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let opts = CgOptions { max_iters: 4 * n, tol: 1e-12 };
+    let (x, _) = cg_solve(|v| a.matvec(v), &rhs, opts);
+    let x_ref = Cholesky::factor(&a, 0.0).unwrap().solve(&rhs);
+    for i in 0..n {
+        let scale = x_ref[i].abs().max(1.0);
+        assert!(
+            (x[i] - x_ref[i]).abs() / scale < 1e-5,
+            "component {i}: cg {} vs chol {}",
+            x[i],
+            x_ref[i]
+        );
+    }
+}
+
+#[test]
+fn full_lanczos_recovers_known_spectrum() {
+    let mut rng = Rng::new(33);
+    let eigs = vec![0.5, 1.0, 2.0, 3.5, 5.0, 8.0, 13.0, 21.0];
+    let a = spd_with_spectrum(&eigs, &mut rng);
+    let b: Vec<f64> = (0..eigs.len()).map(|_| rng.normal()).collect();
+    let res = lanczos(|v| a.matvec(v), &b, eigs.len());
+    assert_eq!(res.alpha.len(), eigs.len(), "generic start vector: no early breakdown");
+    let ritz = ritz_values(&res.alpha, &res.beta);
+    for (t, e) in ritz.iter().zip(&eigs) {
+        assert!((t - e).abs() < 1e-8, "ritz {t} vs eigenvalue {e}");
+    }
+}
+
+#[test]
+fn partial_lanczos_ritz_values_bound_and_converge_to_extremes() {
+    let mut rng = Rng::new(34);
+    let n = 24;
+    // both spectral edges isolated by large gaps (1 ... 10..20 ... 40), so
+    // the extreme Ritz values provably converge fast in k
+    let mut eigs = vec![1.0];
+    eigs.extend((0..n - 2).map(|i| 10.0 + 10.0 * i as f64 / (n - 3) as f64));
+    eigs.push(40.0);
+    let (lam_min, lam_max) = (eigs[0], eigs[n - 1]);
+    let a = spd_with_spectrum(&eigs, &mut rng);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut prev_max = f64::NEG_INFINITY;
+    for k in [4usize, 8, 16] {
+        let res = lanczos(|v| a.matvec(v), &b, k);
+        let ritz = ritz_values(&res.alpha, &res.beta);
+        // Rayleigh–Ritz: every Ritz value lies inside the true spectrum
+        for t in &ritz {
+            assert!(
+                *t >= lam_min - 1e-8 && *t <= lam_max + 1e-8,
+                "ritz {t} outside [{lam_min}, {lam_max}] at k={k}"
+            );
+        }
+        // extreme Ritz values are monotone in k (Krylov spaces nest)
+        let t_max = *ritz.last().unwrap();
+        assert!(t_max >= prev_max - 1e-10, "max ritz regressed at k={k}");
+        prev_max = t_max;
+    }
+    // by k=16 the extremes are essentially converged (Lanczos converges
+    // fastest at the edges of the spectrum)
+    let res = lanczos(|v| a.matvec(v), &b, 16);
+    let ritz = ritz_values(&res.alpha, &res.beta);
+    assert!((ritz.last().unwrap() - lam_max).abs() / lam_max < 1e-6);
+    assert!((ritz.first().unwrap() - lam_min).abs() < 1e-3);
+}
+
+#[test]
+fn lanczos_three_term_recurrence_holds() {
+    // A·Q ≈ Q·T exactly on all but the last column (whose residual carries
+    // the next beta) — the defining identity of the decomposition.
+    let mut rng = Rng::new(35);
+    let n = 16;
+    let a = random_spd(n, n as f64, &mut rng);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let k = 8;
+    let res = lanczos(|v| a.matvec(v), &b, k);
+    let kk = res.alpha.len();
+    let mut t = Mat::zeros(kk, kk);
+    for i in 0..kk {
+        t[(i, i)] = res.alpha[i];
+        if i + 1 < kk {
+            t[(i, i + 1)] = res.beta[i];
+            t[(i + 1, i)] = res.beta[i];
+        }
+    }
+    let aq = a.matmul(&res.q);
+    let qt = res.q.matmul(&t);
+    for j in 0..kk - 1 {
+        for i in 0..n {
+            assert!(
+                (aq[(i, j)] - qt[(i, j)]).abs() < 1e-8,
+                "recurrence violated at ({i},{j})"
+            );
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Durability acceptance suite: crash recovery must be *bitwise* — the
+//! recovered model's predictions carry the same f64 bit patterns as an
+//! uninterrupted run's, at any thread count and on either SIMD path —
+//! and corruption of any durable file must degrade cleanly (fallback or
+//! truncation), never panic, never load silently-wrong state.
+//!
+//! The crash is simulated with `DurableModel::abandon()`, which drops the
+//! wrapper without the final snapshot — exactly the state an `abort()`
+//! leaves behind: the WAL tail after the last periodic snapshot is the
+//! only record of the most recent observations.  ci.sh additionally runs
+//! a real kill-and-recover gate through `serve --checkpoint-dir`.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use wiski::backend::{Executor, NativeBackend};
+use wiski::data::Projection;
+use wiski::gp::{OSvgp, OnlineGp, Wiski, WiskiConfig};
+use wiski::par;
+use wiski::persist::{
+    CheckpointPolicy, DurableModel, FsyncPolicy, Persistable, Snapshot,
+};
+use wiski::rng::Rng;
+use wiski::simd;
+
+/// Tests here mutate process-global thread/SIMD state; serialize them and
+/// restore the defaults on the way out (same idiom as tests/parallel.rs).
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_simd<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    simd::set_enabled(on);
+    let out = f();
+    simd::set_enabled(true);
+    out
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("wiski-persist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small WISKI variant with step batch q=1: batches of one pin the
+/// chunk boundaries, so any split of the stream across crash/resume
+/// executes the identical artifact sequence.
+fn fresh_wiski() -> Wiski {
+    let mut be = NativeBackend::empty();
+    be.add_wiski_family("rbf", 2, 8, 16, 1, 4, false);
+    let rt: Arc<dyn Executor> = Arc::new(be);
+    let cfg = WiskiConfig {
+        kind: "rbf".into(),
+        g: 8,
+        d: 2,
+        r: 16,
+        lr: 1e-3,
+        grad_steps: 1,
+        learn_noise: true,
+    };
+    Wiski::new(rt, cfg, Projection::identity(2)).unwrap()
+}
+
+/// Deterministic 32-point stream (same for every run in this file).
+fn stream(n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(2024);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = vec![rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)];
+        let y = (2.5 * x[0]).sin() * (1.5 * x[1]).cos() + 0.05 * rng.normal();
+        xs.push(x);
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+fn queries() -> Vec<Vec<f64>> {
+    vec![vec![0.0, 0.0], vec![0.5, -0.3], vec![-0.7, 0.6]]
+}
+
+/// Predictions as raw bit patterns: the comparison currency of this file.
+fn predict_bits<M: OnlineGp>(model: &mut M) -> Vec<(u64, u64, u64)> {
+    model
+        .predict(&queries())
+        .unwrap()
+        .iter()
+        .map(|p| (p.mean.to_bits(), p.var_f.to_bits(), p.var_y.to_bits()))
+        .collect()
+}
+
+fn small_policy() -> CheckpointPolicy {
+    CheckpointPolicy {
+        every_records: 10,
+        segment_records: 4,
+        fsync: FsyncPolicy::Never,
+        keep_snapshots: 2,
+    }
+}
+
+/// Stream all `n` points through a plain (non-durable) model.
+fn run_uninterrupted(n: usize) -> Vec<(u64, u64, u64)> {
+    let mut model = fresh_wiski();
+    let (xs, ys) = stream(n);
+    for i in 0..n {
+        model.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    predict_bits(&mut model)
+}
+
+/// Stream `crash_at` points durably, crash (abandon: no final snapshot),
+/// recover, stream the rest, and return the predictions' bits.
+fn run_crashed_and_resumed(dir: &std::path::Path, n: usize, crash_at: usize) -> Vec<(u64, u64, u64)> {
+    let (xs, ys) = stream(n);
+    let policy = small_policy();
+    let (mut dm, report) = DurableModel::open(fresh_wiski(), dir, policy, false).unwrap();
+    assert_eq!(report.observations, 0);
+    for i in 0..crash_at {
+        dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    dm.abandon(); // crash: WAL tail past the last snapshot is all that survives
+
+    let (mut dm, report) = DurableModel::open(fresh_wiski(), dir, policy, true).unwrap();
+    // with every_records=10 and a crash at 17: snapshot covers 10, the WAL
+    // replays 7 more records, and the model has seen all 17 points
+    assert_eq!(report.snapshot_seq as usize, (crash_at / 10) * 10);
+    assert_eq!(report.durable_records as usize, crash_at);
+    assert_eq!(report.replayed as usize, crash_at - report.snapshot_seq as usize);
+    assert!(!report.truncated);
+    assert_eq!(report.observations as usize, crash_at);
+    assert_eq!(dm.inner().num_observed(), crash_at);
+    for i in crash_at..n {
+        dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    predict_bits(&mut dm)
+}
+
+/// THE acceptance criterion: a 32-point stream crashed at 17 and resumed
+/// matches the uninterrupted run bit for bit — crossed over worker-thread
+/// counts {1, 8} and SIMD {forced-scalar, auto}, all against the one
+/// baseline, so recovery composes with both determinism contracts.
+#[test]
+fn recovery_is_bitwise_across_threads_and_simd() {
+    let _g = lock();
+    let (n, crash_at) = (32usize, 17usize);
+    par::set_threads(1);
+    let baseline = with_simd(false, || run_uninterrupted(n));
+    for threads in [1usize, 8] {
+        for simd_on in [false, true] {
+            par::set_threads(threads);
+            let plain = with_simd(simd_on, || run_uninterrupted(n));
+            assert_eq!(
+                plain, baseline,
+                "uninterrupted run diverged at threads={threads} simd={simd_on}"
+            );
+            let dir = tmp_dir(&format!("parity-t{threads}-s{simd_on}"));
+            let recovered =
+                with_simd(simd_on, || run_crashed_and_resumed(&dir, n, crash_at));
+            assert_eq!(
+                recovered, baseline,
+                "crash+resume diverged from uninterrupted at threads={threads} simd={simd_on}"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    par::set_threads(0);
+}
+
+/// Snapshot round trip through encode/decode restores every bit of
+/// resumable state: theta, Adam moments, caches — verified by predictions
+/// and by continuing the stream identically afterwards.
+#[test]
+fn wiski_snapshot_roundtrip_is_bitwise() {
+    let _g = lock();
+    let (xs, ys) = stream(12);
+    let mut model = fresh_wiski();
+    for i in 0..12 {
+        model.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    let snap = Snapshot::new(model.persist_kind(), 12, model.save_sections());
+    let bytes = snap.encode();
+    let decoded = Snapshot::decode(&bytes).unwrap();
+
+    let mut restored = fresh_wiski();
+    restored.restore_sections(&decoded).unwrap();
+    assert_eq!(restored.num_observed(), 12);
+    assert_eq!(
+        restored.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+        model.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(restored.last_mll.to_bits(), model.last_mll.to_bits());
+    assert_eq!(predict_bits(&mut restored), predict_bits(&mut model));
+    // the restored model continues identically, not just predicts
+    let (cx, cy) = (vec![0.25, -0.15], 0.4);
+    model.observe_weighted(&[cx.clone()], &[cy], &[1.0]).unwrap();
+    restored.observe_weighted(&[cx], &[cy], &[1.0]).unwrap();
+    assert_eq!(predict_bits(&mut restored), predict_bits(&mut model));
+}
+
+#[test]
+fn osvgp_snapshot_roundtrip_is_bitwise() {
+    let _g = lock();
+    let make = || {
+        let mut be = NativeBackend::empty();
+        be.add_osvgp_family("rbf", 1, 8, 1, 4);
+        let rt: Arc<dyn Executor> = Arc::new(be);
+        OSvgp::new(rt, "rbf", 1, 8, 1e-3, 0.05, Projection::identity(1), 11).unwrap()
+    };
+    let mut model = make();
+    for i in 0..6 {
+        let x = -0.8 + 0.3 * i as f64;
+        model.observe(&[x], (2.0f64 * x).sin()).unwrap();
+    }
+    let snap = Snapshot::new(model.persist_kind(), 6, model.save_sections());
+    let decoded = Snapshot::decode(&snap.encode()).unwrap();
+    let mut restored = make();
+    restored.restore_sections(&decoded).unwrap();
+    assert_eq!(restored.num_observed(), 6);
+    assert_eq!(
+        restored.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+        model.theta.iter().map(|t| t.to_bits()).collect::<Vec<_>>()
+    );
+    let q: Vec<Vec<f64>> = vec![vec![0.1], vec![-0.4]];
+    let a = model.predict(&q).unwrap();
+    let b = restored.predict(&q).unwrap();
+    for (pa, pb) in a.iter().zip(&b) {
+        assert_eq!(pa.mean.to_bits(), pb.mean.to_bits());
+        assert_eq!(pa.var_y.to_bits(), pb.var_y.to_bits());
+    }
+    // a snapshot without the osvgp sections must be a clean error —
+    // missing state is corruption, never silently defaulted
+    let mut wrong = make();
+    let empty = Snapshot::new("osvgp", 1, vec![]);
+    assert!(wrong.restore_sections(&empty).is_err());
+}
+
+/// Corrupting the newest snapshot must fall back to the previous one plus
+/// a longer WAL replay — same final state, never a panic or an abort.
+#[test]
+fn corrupt_newest_snapshot_falls_back_and_still_recovers_bitwise() {
+    let _g = lock();
+    let (n, crash_at) = (32usize, 27usize);
+    par::set_threads(1);
+    let baseline = with_simd(false, || run_uninterrupted(n));
+
+    let dir = tmp_dir("snapfall");
+    let (xs, ys) = stream(n);
+    let policy = small_policy();
+    let (mut dm, _) = DurableModel::open(fresh_wiski(), &dir, policy, false).unwrap();
+    for i in 0..crash_at {
+        dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    dm.abandon();
+    // snapshots at 10 and 20 are on disk (keep_snapshots=2); flip a bit in
+    // the newest so recovery must fall back to seq 10 and replay 11..27
+    let mut snaps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.file_name().unwrap().to_string_lossy().ends_with(".ckpt"))
+        .collect();
+    snaps.sort();
+    assert_eq!(snaps.len(), 2, "policy keeps two snapshots");
+    let newest = snaps.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(newest, &bytes).unwrap();
+
+    let (mut dm, report) = with_simd(false, || {
+        DurableModel::open(fresh_wiski(), &dir, policy, true).unwrap()
+    });
+    assert_eq!(report.snapshot_seq, 10, "must fall back past the corrupt snapshot");
+    assert_eq!(report.replayed, 17);
+    assert_eq!(report.observations as usize, crash_at);
+    for i in crash_at..n {
+        with_simd(false, || dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap());
+    }
+    let recovered = with_simd(false, || predict_bits(&mut dm));
+    assert_eq!(recovered, baseline, "fallback recovery must still be bitwise");
+    par::set_threads(0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A torn/corrupt WAL tail is truncated at the last valid record — the
+/// recovery surfaces it in the report and the model resumes from what was
+/// durable, with no panic anywhere on the path.
+#[test]
+fn corrupt_wal_tail_truncates_cleanly() {
+    let _g = lock();
+    let dir = tmp_dir("waltail");
+    let (xs, ys) = stream(17);
+    let policy = small_policy();
+    let (mut dm, _) = DurableModel::open(fresh_wiski(), &dir, policy, false).unwrap();
+    for i in 0..17 {
+        dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    dm.abandon();
+    // chop bytes off the newest WAL segment: a torn final record
+    let mut segs: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.file_name().unwrap().to_string_lossy().ends_with(".log"))
+        .collect();
+    segs.sort();
+    let newest = segs.last().unwrap();
+    let len = std::fs::metadata(newest).unwrap().len();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(newest)
+        .unwrap()
+        .set_len(len - 7)
+        .unwrap();
+
+    let (mut dm, report) = DurableModel::open(fresh_wiski(), &dir, policy, true).unwrap();
+    assert!(report.truncated, "torn tail must be reported");
+    assert_eq!(report.durable_records, 16, "exactly the torn record is lost");
+    assert_eq!(report.observations, 16);
+    // the truncated log is now clean: the model keeps working and a second
+    // recovery sees no further damage
+    dm.observe_weighted(&[xs[16].clone()], &[ys[16]], &[1.0]).unwrap();
+    let _ = predict_bits(&mut dm);
+    dm.abandon();
+    let (_, report) = DurableModel::open(fresh_wiski(), &dir, policy, true).unwrap();
+    assert!(!report.truncated);
+    assert_eq!(report.observations, 17);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A structurally-wrong snapshot (valid checksums, wrong shape) must be a
+/// clean error from recovery — silently-wrong state is the one unforgivable
+/// failure mode for a durability layer.
+#[test]
+fn structurally_incompatible_snapshot_is_a_clean_error() {
+    let _g = lock();
+    let dir = tmp_dir("structmismatch");
+    let (xs, ys) = stream(12);
+    let policy = small_policy();
+    let (mut dm, _) = DurableModel::open(fresh_wiski(), &dir, policy, false).unwrap();
+    for i in 0..12 {
+        dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+    }
+    drop(dm); // clean shutdown: final snapshot at seq 12
+
+    // restore into a model of a *different* variant (g=4 grid): every
+    // checksum passes, but the structural validation must refuse it
+    let mut be = NativeBackend::empty();
+    be.add_wiski_family("rbf", 2, 4, 16, 1, 4, false);
+    let rt: Arc<dyn Executor> = Arc::new(be);
+    let cfg = WiskiConfig {
+        kind: "rbf".into(),
+        g: 4,
+        d: 2,
+        r: 16,
+        lr: 1e-3,
+        grad_steps: 1,
+        learn_noise: true,
+    };
+    let other = Wiski::new(rt, cfg, Projection::identity(2)).unwrap();
+    let err = DurableModel::open(other, &dir, policy, true);
+    assert!(err.is_err(), "variant mismatch must fail recovery, not load garbage");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("does not match"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Opening without `resume` on a directory that already holds durable
+/// state must refuse: silently overwriting a WAL defeats the point.
+#[test]
+fn fresh_open_refuses_dirty_directory() {
+    let _g = lock();
+    let dir = tmp_dir("dirty");
+    let policy = small_policy();
+    let (mut dm, _) = DurableModel::open(fresh_wiski(), &dir, policy, false).unwrap();
+    let (xs, ys) = stream(1);
+    dm.observe_weighted(&[xs[0].clone()], &[ys[0]], &[1.0]).unwrap();
+    dm.abandon();
+    let again = DurableModel::open(fresh_wiski(), &dir, policy, false);
+    assert!(again.is_err(), "non-resume open of a dirty dir must error");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Compaction keeps the checkpoint directory O(1): snapshots are pruned to
+/// `keep_snapshots` and WAL segments a snapshot covers are deleted, so the
+/// file count is bounded regardless of stream length.
+#[test]
+fn compaction_bounds_directory_size() {
+    let _g = lock();
+    let count_files = |dir: &std::path::Path| std::fs::read_dir(dir).unwrap().count();
+    let mut counts = Vec::new();
+    for n in [20usize, 60] {
+        let dir = tmp_dir(&format!("compact{n}"));
+        let (xs, ys) = stream(n);
+        let policy = small_policy();
+        let (mut dm, _) = DurableModel::open(fresh_wiski(), &dir, policy, false).unwrap();
+        for i in 0..n {
+            dm.observe_weighted(&[xs[i].clone()], &[ys[i]], &[1.0]).unwrap();
+        }
+        drop(dm); // final snapshot + prune
+        counts.push(count_files(&dir));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert!(
+        counts[0] <= 6 && counts[1] <= 6,
+        "directory must stay bounded, got {counts:?} files for 20/60 records"
+    );
+    assert!(counts[1] <= counts[0] + 1, "file count must not grow with stream length");
+}
